@@ -1,0 +1,62 @@
+"""``python -m benchmarks.run`` — every paper table/figure + system benches.
+
+Writes JSON artifacts under experiments/ and prints a summary.  Use
+--full for the complete calibration grids (the default is the quick pass
+used in CI / bench_output.txt).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+    quick = not args.full
+    os.makedirs("experiments", exist_ok=True)
+    results = {}
+    t_all = time.time()
+
+    from . import advisor_validation, fig11_13_usecase, roofline_table, \
+        sim_throughput
+
+    print("=" * 72)
+    print("[1/4] paper use-case (Figs. 11a/11b/12/13) — SDN vs legacy")
+    print("=" * 72)
+    results["fig11_13"] = fig11_13_usecase.main(quick=quick)
+    json.dump(results["fig11_13"], open("experiments/fig11_13.json", "w"),
+              indent=1)
+
+    print("=" * 72)
+    print("[2/4] simulator throughput + vmapped policy sweeps")
+    print("=" * 72)
+    results["sim_throughput"] = sim_throughput.main(quick=quick)
+    json.dump(results["sim_throughput"],
+              open("experiments/sim_throughput.json", "w"), indent=1)
+
+    print("=" * 72)
+    print("[3/4] collective-schedule advisor validation (DES vs analytic)")
+    print("=" * 72)
+    results["advisor"] = advisor_validation.main(quick=quick)
+    json.dump(results["advisor"],
+              open("experiments/advisor_validation.json", "w"), indent=1)
+
+    print("=" * 72)
+    print("[4/4] roofline table (aggregated from dry-run artifacts)")
+    print("=" * 72)
+    results["roofline"] = roofline_table.main()
+
+    print("=" * 72)
+    ok = results["fig11_13"]["qualitative_claim_reproduced"]
+    print(f"benchmarks done in {time.time() - t_all:.0f}s; "
+          f"paper qualitative claim reproduced: {ok}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,77 @@
+"""Simulator scaling benchmark (beyond paper): events/sec and the vmapped
+policy-sweep capability the Java original lacks (one scenario per JVM run
+vs thousands of replicas per tensor program here)."""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (PolicyConfig, ROUTE_LEGACY, ROUTE_SDN, make_simulator,
+                        paper_setup, simulate_batch)
+from repro.core.engine import make_consts
+
+
+def single_run_events_per_sec(setup) -> Dict[str, float]:
+    run = jax.jit(make_simulator(setup))
+    pol = PolicyConfig().as_arrays()
+    t0 = time.perf_counter()
+    s = run(pol)
+    jax.block_until_ready(s.time)
+    compile_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    n = 5
+    for _ in range(n):
+        s = run(pol)
+        jax.block_until_ready(s.time)
+    dt = (time.perf_counter() - t0) / n
+    return {"events": int(s.steps), "run_s": dt,
+            "events_per_s": float(s.steps) / dt, "compile_s": compile_s}
+
+
+def sweep_scaling(setup, widths=(1, 8, 32)) -> Dict[str, Dict]:
+    out = {}
+    for w in widths:
+        pols = {
+            "routing": jnp.asarray([ROUTE_SDN, ROUTE_LEGACY] * (w // 2)
+                                   or [ROUTE_SDN])[:w],
+            "traffic": jnp.zeros(w, jnp.int32),
+            "placement": jnp.zeros(w, jnp.int32),
+            "job_selection": jnp.zeros(w, jnp.int32),
+            "job_concurrency": jnp.full(w, 2, jnp.int32),
+            "seed": jnp.arange(w, dtype=jnp.int32),
+        }
+        t0 = time.perf_counter()
+        s = simulate_batch(setup, pols)
+        jax.block_until_ready(s.time)
+        compile_and_run = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        s = simulate_batch(setup, pols)
+        jax.block_until_ready(s.time)
+        run_s = time.perf_counter() - t0
+        out[str(w)] = {"replicas": w, "run_s": run_s,
+                       "replicas_per_s": w / run_s,
+                       "first_call_s": compile_and_run}
+    return out
+
+
+def main(quick: bool = False) -> Dict:
+    setup = paper_setup(seed=0, split=2)
+    single = single_run_events_per_sec(setup)
+    sweep = sweep_scaling(setup, widths=(1, 8) if quick else (1, 8, 32))
+    base = sweep["1"]["run_s"]
+    print(f"sim_throughput: {single['events_per_s']:.0f} events/s "
+          f"({single['events']} events in {single['run_s'] * 1e3:.0f} ms)")
+    for w, r in sweep.items():
+        speedup = (base * int(w)) / r["run_s"]
+        print(f"  vmap x{w:>3}: {r['run_s'] * 1e3:8.0f} ms "
+              f"({speedup:4.1f}x vs sequential singles)")
+    return {"single": single, "sweep": sweep}
+
+
+if __name__ == "__main__":
+    json.dump(main(), open("experiments/sim_throughput.json", "w"), indent=1)

@@ -1,0 +1,4 @@
+from . import ckpt
+from .ckpt import latest_step, restore, save
+
+__all__ = ["ckpt", "save", "restore", "latest_step"]

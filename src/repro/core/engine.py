@@ -1,0 +1,446 @@
+"""The discrete-event engine as a single ``lax.while_loop``.
+
+CloudSim's event heap disappears: between events every rate (channel
+bandwidth, VM MIPS share, power draw) is piecewise constant, so the next
+event time is an analytic ``min`` over fixed-shape state tensors (paper
+Eq. 4 generalized to packet finishes, task finishes and job releases).
+One while-loop iteration = one event:
+
+  admission -> placement -> task activation -> packet activation (routed) ->
+  rates -> dt = earliest horizon -> energy += power*dt -> advance -> completions
+
+Everything is vmap-safe: ``simulate_batch`` sweeps policy/seed vectors as one
+tensor program (the beyond-paper capability — see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import fairshare
+from .mapreduce import (ACTIVE, DONE, KIND_MAP, KIND_REDUCE, SimSetup, VOID,
+                        WAITING)
+from .energy import host_power, switch_power
+from .policies import (JOBSEL_FCFS, JOBSEL_PRIORITY, JOBSEL_SJF,
+                       PLACE_LEAST_USED, PLACE_RANDOM, PLACE_ROUND_ROBIN)
+from .routing import choose_route, flow_hash_u32
+
+_INF = jnp.float32(jnp.inf)
+
+
+class EngineConsts(NamedTuple):
+    """Static (replica-shared) tensors, baked from SimSetup."""
+
+    # routing
+    routes: jnp.ndarray      # [n_nodes^2, K, H]
+    n_cand: jnp.ndarray      # [n_nodes^2]
+    link_bw: jnp.ndarray     # [n_links]
+    link_src: jnp.ndarray
+    link_dst: jnp.ndarray
+    # cluster
+    vm_host: jnp.ndarray
+    vm_total_mips: jnp.ndarray
+    vm_core_mips: jnp.ndarray
+    host_total_mips: jnp.ndarray
+    # jobs / tasks / packets (see mapreduce.py)
+    job_release: jnp.ndarray
+    job_total_mi: jnp.ndarray
+    job_priority: jnp.ndarray
+    job_n_out: jnp.ndarray
+    job_valid: jnp.ndarray
+    task_job: jnp.ndarray
+    task_kind: jnp.ndarray
+    task_mi: jnp.ndarray
+    task_need: jnp.ndarray
+    task_valid: jnp.ndarray
+    pkt_job: jnp.ndarray
+    pkt_phase: jnp.ndarray
+    pkt_bits: jnp.ndarray
+    pkt_gate_task: jnp.ndarray
+    pkt_feeds_task: jnp.ndarray
+    pkt_src_task: jnp.ndarray
+    pkt_dst_task: jnp.ndarray
+    pkt_valid: jnp.ndarray
+    # scalars (static python ints/floats hidden in jnp for pytree friendliness)
+    n_hosts: jnp.ndarray
+    n_switches: jnp.ndarray
+    storage_node: jnp.ndarray
+
+
+class SimState(NamedTuple):
+    time: jnp.ndarray
+    steps: jnp.ndarray
+    stalled: jnp.ndarray
+    place_counter: jnp.ndarray
+    # jobs
+    job_admitted: jnp.ndarray
+    job_admit_t: jnp.ndarray
+    job_out_done: jnp.ndarray
+    job_done_t: jnp.ndarray
+    # tasks
+    task_state: jnp.ndarray
+    task_rem: jnp.ndarray
+    task_got: jnp.ndarray
+    task_vm: jnp.ndarray
+    task_start: jnp.ndarray
+    task_finish: jnp.ndarray
+    # packets
+    pkt_state: jnp.ndarray
+    pkt_rem: jnp.ndarray
+    pkt_pair: jnp.ndarray
+    pkt_cand: jnp.ndarray
+    pkt_start: jnp.ndarray
+    pkt_finish: jnp.ndarray
+    # vms / energy
+    vm_load: jnp.ndarray
+    host_energy: jnp.ndarray
+    host_busy: jnp.ndarray
+    switch_energy: jnp.ndarray
+
+
+def make_consts(setup: SimSetup) -> tuple[EngineConsts, Dict[str, Any]]:
+    rt, cl = setup.route_table, setup.cluster
+    consts = EngineConsts(
+        routes=jnp.asarray(rt.routes),
+        n_cand=jnp.asarray(rt.n_cand),
+        link_bw=jnp.asarray(cl.topo.link_bw),
+        link_src=jnp.asarray(cl.topo.link_src),
+        link_dst=jnp.asarray(cl.topo.link_dst),
+        vm_host=jnp.asarray(cl.vm_host),
+        vm_total_mips=jnp.asarray(cl.vm_total_mips),
+        vm_core_mips=jnp.asarray(cl.vm_core_mips),
+        host_total_mips=jnp.asarray(cl.host_total_mips),
+        job_release=jnp.asarray(setup.job_release),
+        job_total_mi=jnp.asarray(setup.job_total_mi),
+        job_priority=jnp.asarray(setup.job_priority),
+        job_n_out=jnp.asarray(setup.job_n_out),
+        job_valid=jnp.asarray(setup.job_n_out > 0),
+        task_job=jnp.asarray(setup.task_job),
+        task_kind=jnp.asarray(setup.task_kind),
+        task_mi=jnp.asarray(setup.task_mi),
+        task_need=jnp.asarray(setup.task_need),
+        task_valid=jnp.asarray(setup.task_valid),
+        pkt_job=jnp.asarray(setup.pkt_job),
+        pkt_phase=jnp.asarray(setup.pkt_phase),
+        pkt_bits=jnp.asarray(setup.pkt_bits),
+        pkt_gate_task=jnp.asarray(setup.pkt_gate_task),
+        pkt_feeds_task=jnp.asarray(setup.pkt_feeds_task),
+        pkt_src_task=jnp.asarray(setup.pkt_src_task),
+        pkt_dst_task=jnp.asarray(setup.pkt_dst_task),
+        pkt_valid=jnp.asarray(setup.pkt_valid),
+        n_hosts=jnp.asarray(cl.topo.n_hosts, jnp.int32),
+        n_switches=jnp.asarray(cl.topo.n_switches, jnp.int32),
+        storage_node=jnp.asarray(cl.storage_node, jnp.int32),
+    )
+    meta = {
+        "n_nodes": cl.topo.n_nodes,
+        "n_links": cl.topo.n_links,
+        "n_hosts": cl.topo.n_hosts,
+        "n_switches": cl.topo.n_switches,
+        "n_vms": int(cl.vm_host.shape[0]),
+        "intra_bw": cl.intra_bw,
+        "energy": cl.energy,
+        "max_steps": 4 * (setup.n_packets + setup.n_tasks) + 4 * setup.n_jobs + 64,
+    }
+    return consts, meta
+
+
+def init_state(setup: SimSetup) -> SimState:
+    n_j, n_t, n_p = setup.n_jobs, setup.n_tasks, setup.n_packets
+    cl = setup.cluster
+    f = jnp.float32
+    return SimState(
+        time=f(0.0), steps=jnp.int32(0), stalled=jnp.asarray(False),
+        place_counter=jnp.int32(0),
+        job_admitted=jnp.zeros(n_j, bool),
+        job_admit_t=jnp.full(n_j, jnp.nan, f),
+        job_out_done=jnp.zeros(n_j, jnp.int32),
+        job_done_t=jnp.full(n_j, jnp.nan, f),
+        task_state=jnp.where(jnp.asarray(setup.task_valid), WAITING, VOID
+                             ).astype(jnp.int32),
+        task_rem=jnp.asarray(setup.task_mi, f),
+        task_got=jnp.zeros(n_t, jnp.int32),
+        task_vm=jnp.full(n_t, -1, jnp.int32),
+        task_start=jnp.full(n_t, jnp.nan, f),
+        task_finish=jnp.full(n_t, jnp.nan, f),
+        pkt_state=jnp.where(jnp.asarray(setup.pkt_valid), WAITING, VOID
+                            ).astype(jnp.int32),
+        pkt_rem=jnp.asarray(setup.pkt_bits, f),
+        pkt_pair=jnp.full(n_p, -1, jnp.int32),
+        pkt_cand=jnp.full(n_p, -1, jnp.int32),
+        pkt_start=jnp.full(n_p, jnp.nan, f),
+        pkt_finish=jnp.full(n_p, jnp.nan, f),
+        vm_load=jnp.zeros(int(cl.vm_host.shape[0]), jnp.int32),
+        host_energy=jnp.zeros(cl.topo.n_hosts, f),
+        host_busy=jnp.zeros(cl.topo.n_hosts, f),
+        switch_energy=jnp.zeros(cl.topo.n_switches, f),
+    )
+
+
+# ---------------------------------------------------------------------------
+# step phases
+# ---------------------------------------------------------------------------
+
+
+def _admit_and_place(c: EngineConsts, meta, pol, s: SimState) -> SimState:
+    """Admit released jobs (job-selection policy) while concurrency slots are
+    free; place each admitted job's tasks onto VMs (placement policy)."""
+    n_vms = meta["n_vms"]
+
+    def admit_one(_, s: SimState) -> SimState:
+        released = (~s.job_admitted) & c.job_valid & (c.job_release <= s.time)
+        running = s.job_admitted & (s.job_out_done < c.job_n_out) & c.job_valid
+        free = jnp.sum(running.astype(jnp.int32)) < pol["job_concurrency"]
+        any_wait = jnp.any(released)
+        # job-selection key (smaller = better)
+        key = jnp.where(
+            pol["job_selection"] == JOBSEL_SJF, c.job_total_mi,
+            jnp.where(pol["job_selection"] == JOBSEL_PRIORITY,
+                      -c.job_priority, c.job_release))
+        key = jnp.where(released, key, _INF)
+        j = jnp.argmin(key).astype(jnp.int32)
+        do = free & any_wait
+
+        def place(s: SimState) -> SimState:
+            mine = (c.task_job == j) & c.task_valid
+
+            def place_one(t, carry):
+                vm_load, task_vm, counter = carry
+                is_mine = mine[t]
+                h = flow_hash_u32(jnp.int32(t), j, pol["seed"])
+                pick = jnp.where(
+                    pol["placement"] == PLACE_ROUND_ROBIN, counter % n_vms,
+                    jnp.where(pol["placement"] == PLACE_RANDOM, h % n_vms,
+                              jnp.argmin(vm_load).astype(jnp.int32)))
+                pick = pick.astype(jnp.int32)
+                vm_load = jnp.where(is_mine, vm_load.at[pick].add(1), vm_load)
+                task_vm = jnp.where(is_mine, task_vm.at[t].set(pick), task_vm)
+                counter = counter + jnp.where(is_mine, 1, 0)
+                return vm_load, task_vm, counter
+
+            vm_load, task_vm, counter = jax.lax.fori_loop(
+                0, task_vm_len, place_one,
+                (s.vm_load, s.task_vm, s.place_counter))
+            return s._replace(
+                vm_load=vm_load, task_vm=task_vm, place_counter=counter,
+                job_admitted=s.job_admitted.at[j].set(True),
+                job_admit_t=s.job_admit_t.at[j].set(s.time))
+
+        task_vm_len = s.task_vm.shape[0]
+        return jax.lax.cond(do, place, lambda s: s, s)
+
+    return jax.lax.fori_loop(0, s.job_admitted.shape[0], admit_one, s)
+
+
+def _route_links(c: EngineConsts, s: SimState, mask: jnp.ndarray) -> jnp.ndarray:
+    """[N_P, H] link ids of each packet's chosen route (-1 where masked)."""
+    pair = jnp.maximum(s.pkt_pair, 0)
+    cand = jnp.maximum(s.pkt_cand, 0)
+    links = c.routes[pair, cand]
+    return jnp.where(mask[:, None], links, -1)
+
+
+NODE_OFFSET = 1 << 20  # pkt_src/dst_task >= NODE_OFFSET encodes a direct
+                       # node id (flow-level frontend, core.flows)
+
+
+def _pkt_endpoints(c: EngineConsts, s: SimState):
+    """Resolve src/dst node of every packet from current task placement.
+
+    -1 -> SAN storage; >= NODE_OFFSET -> direct node id; else task id."""
+    n_tasks = s.task_vm.shape[0]
+
+    def node_of(task_idx):
+        t = jnp.clip(task_idx, 0, n_tasks - 1)
+        vm = jnp.maximum(s.task_vm[t], 0)
+        node = jnp.where(task_idx < 0, c.storage_node, c.vm_host[vm])
+        return jnp.where(task_idx >= NODE_OFFSET,
+                         task_idx - NODE_OFFSET, node).astype(jnp.int32)
+    return node_of(c.pkt_src_task), node_of(c.pkt_dst_task)
+
+
+def _activate(c: EngineConsts, meta, pol, s: SimState) -> SimState:
+    """Task activation (vectorized) then packet activation (ordered fori —
+    the controller serializes arrivals; each sees earlier channel counts)."""
+    # tasks: all inputs arrived
+    t_ready = ((s.task_state == WAITING) & (s.task_got >= c.task_need)
+               & (s.task_vm >= 0))
+    task_state = jnp.where(t_ready, ACTIVE, s.task_state)
+    task_start = jnp.where(t_ready, s.time, s.task_start)
+    s = s._replace(task_state=task_state, task_start=task_start)
+
+    # packets: job admitted & gate task done
+    gate = c.pkt_gate_task
+    gate_ok = jnp.where(gate < 0, True,
+                        s.task_state[jnp.maximum(gate, 0)] == DONE)
+    admitted = s.job_admitted[jnp.maximum(c.pkt_job, 0)]
+    p_ready = (s.pkt_state == WAITING) & admitted & gate_ok & c.pkt_valid
+    src_node, dst_node = _pkt_endpoints(c, s)
+    n_nodes = meta["n_nodes"]
+    # unreachable pairs (no candidate route, different nodes) never
+    # activate -> the engine reports a stall instead of free transfer
+    pair_all = (src_node * n_nodes + dst_node).astype(jnp.int32)
+    reachable = (c.n_cand[pair_all] > 0) | (src_node == dst_node)
+    p_ready = p_ready & reachable
+
+    ch0 = fairshare.channel_counts(
+        _route_links(c, s, s.pkt_state == ACTIVE), s.pkt_state == ACTIVE,
+        meta["n_links"])
+
+    def act_one(i, carry):
+        pkt_state, pkt_pair, pkt_cand, pkt_start, ch = carry
+        ready = p_ready[i]
+        pair = (src_node[i] * n_nodes + dst_node[i]).astype(jnp.int32)
+        # legacy flow = task-to-task connection (§4: "task-to-task
+        # communication"); each flow picks its equal-hop route independently
+        # at random and keeps it (§5.2).
+        fh = flow_hash_u32(c.pkt_src_task[i] + 1, c.pkt_dst_task[i] + 1,
+                           pol["seed"])
+        cand = choose_route(pol["routing"], c.routes[pair], c.n_cand[pair],
+                            c.link_bw, ch, fh)
+        links = c.routes[pair, cand]
+        valid = links >= 0
+        ch_new = ch.at[jnp.maximum(links, 0)].add(valid.astype(jnp.int32))
+        return (
+            jnp.where(ready, pkt_state.at[i].set(ACTIVE), pkt_state),
+            jnp.where(ready, pkt_pair.at[i].set(pair), pkt_pair),
+            jnp.where(ready, pkt_cand.at[i].set(cand), pkt_cand),
+            jnp.where(ready, pkt_start.at[i].set(s.time), pkt_start),
+            jnp.where(ready, ch_new, ch),
+        )
+
+    pkt_state, pkt_pair, pkt_cand, pkt_start, _ = jax.lax.fori_loop(
+        0, s.pkt_state.shape[0], act_one,
+        (s.pkt_state, s.pkt_pair, s.pkt_cand, s.pkt_start, ch0))
+    return s._replace(pkt_state=pkt_state, pkt_pair=pkt_pair,
+                      pkt_cand=pkt_cand, pkt_start=pkt_start)
+
+
+def _rates(c: EngineConsts, meta, pol, s: SimState):
+    p_active = s.pkt_state == ACTIVE
+    links = _route_links(c, s, p_active)
+    pkt_rate = fairshare.rates(pol["traffic"], links, p_active, c.link_bw,
+                               meta["intra_bw"])
+    t_active = s.task_state == ACTIVE
+    vm = jnp.maximum(s.task_vm, 0)
+    n_on_vm = jnp.zeros_like(c.vm_total_mips, jnp.int32).at[vm].add(
+        t_active.astype(jnp.int32))
+    share = c.vm_total_mips[vm] / jnp.maximum(n_on_vm[vm], 1).astype(jnp.float32)
+    task_rate = jnp.where(t_active, jnp.minimum(c.vm_core_mips[vm], share), 0.0)
+    return pkt_rate, task_rate, links, p_active, t_active
+
+
+def _finished(c: EngineConsts, meta, s: SimState) -> jnp.ndarray:
+    all_done = jnp.all(~c.job_valid | (s.job_out_done >= c.job_n_out))
+    return all_done | s.stalled | (s.steps >= meta["max_steps"])
+
+
+def _step(c: EngineConsts, meta, pol, s: SimState) -> SimState:
+    s = _admit_and_place(c, meta, pol, s)
+    s = _activate(c, meta, pol, s)
+    pkt_rate, task_rate, links, p_active, t_active = _rates(c, meta, pol, s)
+
+    # earliest horizon (Eq. 4 generalized)
+    dt_p = jnp.min(jnp.where(p_active & (pkt_rate > 0),
+                             s.pkt_rem / pkt_rate, _INF))
+    dt_t = jnp.min(jnp.where(t_active & (task_rate > 0),
+                             s.task_rem / task_rate, _INF))
+    future = (~s.job_admitted) & c.job_valid & (c.job_release > s.time)
+    dt_r = jnp.min(jnp.where(future, c.job_release - s.time, _INF))
+    dt = jnp.minimum(jnp.minimum(dt_p, dt_t), dt_r)
+    stalled = jnp.isinf(dt)
+    dt = jnp.where(stalled, 0.0, dt)
+
+    # energy (power is constant over [t, t+dt))
+    vm_safe = jnp.maximum(s.task_vm, 0)
+    host_of_task = c.vm_host[vm_safe]
+    mips_used = jnp.zeros_like(c.host_total_mips).at[host_of_task].add(
+        jnp.where(t_active, task_rate, 0.0))
+    util = jnp.clip(mips_used / c.host_total_mips, 0.0, 1.0)
+    host_energy = s.host_energy + host_power(util, meta["energy"]) * dt
+    host_busy = s.host_busy + jnp.where(util > 0, dt, 0.0)
+    ch = fairshare.channel_counts(links, p_active, meta["n_links"])
+    live_link = (ch > 0).astype(jnp.int32)
+    node_ports = jnp.zeros(meta["n_nodes"], jnp.int32)
+    node_ports = node_ports.at[c.link_src].add(live_link)
+    node_ports = node_ports.at[c.link_dst].add(live_link)
+    sw_ports = jax.lax.dynamic_slice_in_dim(node_ports, meta["n_hosts"],
+                                            meta["n_switches"])
+    switch_energy = s.switch_energy + switch_power(sw_ports, meta["energy"]) * dt
+
+    # advance
+    time = s.time + dt
+    pkt_rem = jnp.where(p_active, s.pkt_rem - pkt_rate * dt, s.pkt_rem)
+    task_rem = jnp.where(t_active, s.task_rem - task_rate * dt, s.task_rem)
+    pkt_tol = c.pkt_bits * 1e-6 + 1.0
+    task_tol = c.task_mi * 1e-6 + 1e-6
+    p_done_now = p_active & (pkt_rem <= pkt_tol)
+    t_done_now = t_active & (task_rem <= task_tol)
+
+    pkt_state = jnp.where(p_done_now, DONE, s.pkt_state)
+    pkt_finish = jnp.where(p_done_now, time, s.pkt_finish)
+    task_state = jnp.where(t_done_now, DONE, s.task_state)
+    task_finish = jnp.where(t_done_now, time, s.task_finish)
+
+    # completions feed gates
+    feeds = jnp.maximum(c.pkt_feeds_task, 0)
+    task_got = s.task_got.at[feeds].add(
+        (p_done_now & (c.pkt_feeds_task >= 0)).astype(jnp.int32))
+    out_pkt = p_done_now & (c.pkt_feeds_task < 0)
+    job_of = jnp.maximum(c.pkt_job, 0)
+    job_out_done = s.job_out_done.at[job_of].add(out_pkt.astype(jnp.int32))
+    newly_job_done = (job_out_done >= c.job_n_out) & \
+        (s.job_out_done < c.job_n_out) & c.job_valid
+    job_done_t = jnp.where(newly_job_done, time, s.job_done_t)
+    vm_load = s.vm_load.at[vm_safe].add(-t_done_now.astype(jnp.int32))
+
+    return s._replace(
+        time=time, steps=s.steps + 1, stalled=stalled,
+        job_out_done=job_out_done, job_done_t=job_done_t,
+        task_state=task_state, task_rem=task_rem, task_got=task_got,
+        task_finish=task_finish,
+        pkt_state=pkt_state, pkt_rem=pkt_rem, pkt_finish=pkt_finish,
+        vm_load=vm_load, host_energy=host_energy, host_busy=host_busy,
+        switch_energy=switch_energy)
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+
+def make_simulator(setup: SimSetup):
+    """Returns a jit-able ``run(policy_dict) -> SimState`` closure."""
+    consts, meta = make_consts(setup)
+    s0 = init_state(setup)
+
+    def run(pol: Dict[str, jnp.ndarray]) -> SimState:
+        def cond(s):
+            return ~_finished(consts, meta, s)
+
+        def body(s):
+            new = _step(consts, meta, pol, s)
+            live = ~_finished(consts, meta, s)
+            return jax.tree_util.tree_map(
+                lambda n, o: jnp.where(live, n, o), new, s)
+
+        return jax.lax.while_loop(cond, body, s0)
+
+    return run
+
+
+def simulate(setup: SimSetup, policy) -> SimState:
+    """Run one replica (policy: PolicyConfig or dict of scalars)."""
+    pol = policy.as_arrays() if hasattr(policy, "as_arrays") else policy
+    return jax.jit(make_simulator(setup))(pol)
+
+
+def simulate_batch(setup: SimSetup, pols: Dict[str, jnp.ndarray]) -> SimState:
+    """vmap over a policy sweep: every dict value has a leading replica dim."""
+    run = make_simulator(setup)
+    return jax.jit(jax.vmap(run))(pols)

@@ -1,0 +1,105 @@
+"""Channel bandwidth allocation.
+
+Paper Eq. 3 (fair share): every channel crossing link i gets l_bw(i)/nc(i);
+a channel's rate is the minimum share along its route.  This is what
+CloudSimSDN implements and what the paper's use-case uses.
+
+Beyond paper: progressive-filling **max-min water-filling**, which is
+Pareto-optimal (Eq. 3 can leave residual capacity on non-bottleneck links).
+Offered as TRAFFIC_WATERFILL, used in the §Perf iterations of the advisor.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+TRAFFIC_FAIRSHARE = 0  # paper Eq. 3
+TRAFFIC_WATERFILL = 1  # beyond-paper max-min fairness
+
+
+def channel_counts(route_links: jnp.ndarray, active: jnp.ndarray,
+                   n_links: int) -> jnp.ndarray:
+    """nc(i): number of active channels crossing each directed link.
+
+    route_links: int32 [N, H] link ids (-1 pad); active: bool [N]
+    """
+    mask = (route_links >= 0) & active[:, None]
+    safe = jnp.maximum(route_links, 0)
+    contrib = mask.astype(jnp.int32)
+    return jnp.zeros((n_links,), jnp.int32).at[safe.reshape(-1)].add(
+        contrib.reshape(-1))
+
+
+def eq3_rates(route_links: jnp.ndarray, active: jnp.ndarray,
+              link_bw: jnp.ndarray, intra_bw: float) -> jnp.ndarray:
+    """Paper Eq. 3 rate for every packet (0 for inactive).
+
+    Packets with an empty route (src host == dst host) move at ``intra_bw``.
+    """
+    nc = channel_counts(route_links, active, link_bw.shape[0])
+    valid = route_links >= 0
+    safe = jnp.maximum(route_links, 0)
+    share = link_bw[safe] / jnp.maximum(nc[safe], 1).astype(link_bw.dtype)
+    share = jnp.where(valid, share, jnp.inf)
+    bot = jnp.min(share, axis=-1)
+    bot = jnp.where(jnp.isinf(bot), jnp.asarray(intra_bw, link_bw.dtype), bot)
+    return jnp.where(active, bot, 0.0)
+
+
+def waterfill_rates(route_links: jnp.ndarray, active: jnp.ndarray,
+                    link_bw: jnp.ndarray, intra_bw: float,
+                    n_iter: int | None = None) -> jnp.ndarray:
+    """Progressive-filling max-min fair rates.
+
+    Each iteration freezes every flow whose bottleneck link is globally
+    saturated at the current fill level; at most n_links iterations needed.
+    Fixed trip count for jit; early iterations simply become no-ops.
+    """
+    n_links = link_bw.shape[0]
+    n_iter = n_iter if n_iter is not None else min(n_links, 32)
+    valid = route_links >= 0
+    safe = jnp.maximum(route_links, 0)
+
+    def body(_, carry):
+        alloc, frozen = carry
+        live = active & ~frozen
+        # residual capacity per link after frozen allocations
+        used = jnp.zeros((n_links,), link_bw.dtype).at[safe.reshape(-1)].add(
+            jnp.where(valid & frozen[:, None], alloc[:, None],
+                      0.0).reshape(-1))
+        resid = jnp.maximum(link_bw - used, 0.0)
+        n_live = jnp.zeros((n_links,), jnp.int32).at[safe.reshape(-1)].add(
+            (valid & live[:, None]).astype(jnp.int32).reshape(-1))
+        share = resid / jnp.maximum(n_live, 1).astype(link_bw.dtype)
+        share = jnp.where(n_live > 0, share, jnp.inf)
+        # fill level for each live flow = min share along its route
+        flow_share = jnp.where(valid, share[safe], jnp.inf)
+        level = jnp.min(flow_share, axis=-1)  # [N]
+        # global fill step: freeze flows bottlenecked at the minimum level
+        glob = jnp.min(jnp.where(live, level, jnp.inf))
+        glob = jnp.where(jnp.isinf(glob), 0.0, glob)
+        hit = live & (level <= glob * (1 + 1e-6))
+        alloc = jnp.where(hit, glob, alloc)
+        frozen = frozen | hit
+        return alloc, frozen
+
+    alloc0 = jnp.zeros(route_links.shape[0], link_bw.dtype)
+    frozen0 = jnp.zeros(route_links.shape[0], bool)
+    alloc, frozen = jax.lax.fori_loop(0, n_iter, body, (alloc0, frozen0))
+    # any still-unfrozen live flow (iter cap hit) falls back to Eq. 3
+    fallback = eq3_rates(route_links, active, link_bw, intra_bw)
+    alloc = jnp.where(active & ~frozen, fallback, alloc)
+    # intra-host flows
+    empty = ~jnp.any(valid, axis=-1)
+    alloc = jnp.where(active & empty, jnp.asarray(intra_bw, link_bw.dtype), alloc)
+    return jnp.where(active, alloc, 0.0)
+
+
+def rates(policy: jnp.ndarray, route_links: jnp.ndarray, active: jnp.ndarray,
+          link_bw: jnp.ndarray, intra_bw: float) -> jnp.ndarray:
+    """Dispatch on traffic policy (vmap-safe lax.cond)."""
+    return jax.lax.cond(
+        policy == TRAFFIC_WATERFILL,
+        lambda: waterfill_rates(route_links, active, link_bw, intra_bw),
+        lambda: eq3_rates(route_links, active, link_bw, intra_bw),
+    )

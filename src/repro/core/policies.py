@@ -1,0 +1,48 @@
+"""Policy plug-points (paper Fig. 8) as enum-selected vectorized branches.
+
+The Java tool exposes abstract classes; we expose integer policy ids so a
+vmapped sweep can mix policies per replica (lax.switch/cond inside the
+engine).  Extending = adding a branch; the engine is policy-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+# routing (paper §5.2)
+from .routing import ROUTE_LEGACY, ROUTE_SDN  # noqa: F401  (re-export)
+# traffic (paper Eq. 3 + beyond-paper)
+from .fairshare import TRAFFIC_FAIRSHARE, TRAFFIC_WATERFILL  # noqa: F401
+
+# MapReduce task placement (ApplicationMaster)
+PLACE_LEAST_USED = 0   # paper use-case: "VM least-used first"
+PLACE_ROUND_ROBIN = 1
+PLACE_RANDOM = 2
+
+# job selection (ResourceManager / ApplicationMaster queue)
+JOBSEL_FCFS = 0        # paper use-case
+JOBSEL_SJF = 1         # shortest (total MI) job first
+JOBSEL_PRIORITY = 2    # user-supplied priority value
+
+
+@dataclasses.dataclass
+class PolicyConfig:
+    """One replica's policy selection — every field may also be a vmapped array."""
+
+    routing: int = ROUTE_SDN
+    traffic: int = TRAFFIC_FAIRSHARE
+    placement: int = PLACE_LEAST_USED
+    job_selection: int = JOBSEL_FCFS
+    job_concurrency: int = 1_000_000  # paper use-case: effectively unlimited
+    seed: int = 0
+
+    def as_arrays(self):
+        return {
+            "routing": jnp.asarray(self.routing, jnp.int32),
+            "traffic": jnp.asarray(self.traffic, jnp.int32),
+            "placement": jnp.asarray(self.placement, jnp.int32),
+            "job_selection": jnp.asarray(self.job_selection, jnp.int32),
+            "job_concurrency": jnp.asarray(self.job_concurrency, jnp.int32),
+            "seed": jnp.asarray(self.seed, jnp.int32),
+        }

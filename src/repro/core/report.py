@@ -1,0 +1,77 @@
+"""Result extraction (paper §4 'performance results', Eqs. 6-9).
+
+Pure functions over the final SimState so they vmap over policy sweeps.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .engine import SimState
+from .mapreduce import (DONE, KIND_MAP, KIND_REDUCE, PHASE_IN, PHASE_OUT,
+                        PHASE_SHUFFLE, SimSetup)
+
+_NEG = jnp.float32(-jnp.inf)
+
+
+def _seg_max(values: jnp.ndarray, seg: jnp.ndarray, mask: jnp.ndarray,
+             n: int) -> jnp.ndarray:
+    v = jnp.where(mask, values, _NEG)
+    out = jnp.full((n,), _NEG).at[jnp.maximum(seg, 0)].max(v)
+    return jnp.where(jnp.isinf(out), jnp.nan, out)
+
+
+def job_report(setup: SimSetup, s: SimState) -> Dict[str, jnp.ndarray]:
+    """Per-job metrics; every array is [N_J] (vmap for batched states)."""
+    n_j = setup.n_jobs
+    pkt_job = jnp.asarray(setup.pkt_job)
+    pkt_phase = jnp.asarray(setup.pkt_phase)
+    task_job = jnp.asarray(setup.task_job)
+    task_kind = jnp.asarray(setup.task_kind)
+    job_release = jnp.asarray(setup.job_release)
+
+    pdur = s.pkt_finish - s.pkt_start
+    pdone = s.pkt_state == DONE
+    t1 = _seg_max(pdur, pkt_job, pdone & (pkt_phase == PHASE_IN), n_j)
+    t2 = _seg_max(pdur, pkt_job, pdone & (pkt_phase == PHASE_SHUFFLE), n_j)
+    t3 = _seg_max(pdur, pkt_job, pdone & (pkt_phase == PHASE_OUT), n_j)
+    j_tr = t1 + t2 + t3                                   # Eq. 6
+
+    tdur = s.task_finish - s.task_start
+    tdone = s.task_state == DONE
+    j_mp = _seg_max(tdur, task_job, tdone & (task_kind == KIND_MAP), n_j)   # Eq. 7
+    j_rd = _seg_max(tdur, task_job, tdone & (task_kind == KIND_REDUCE), n_j)  # Eq. 8
+
+    return {
+        "transmission_time": j_tr,
+        "t_storage_to_map": t1,
+        "t_shuffle": t2,
+        "t_reduce_to_storage": t3,
+        "map_exec_time": j_mp,
+        "reduce_exec_time": j_rd,
+        "completion_eq9": j_tr + j_mp + j_rd,             # Eq. 9
+        "completion_measured": s.job_done_t - job_release,
+        "queue_delay": s.job_admit_t - job_release,
+        "done_time": s.job_done_t,
+    }
+
+
+def energy_report(s: SimState) -> Dict[str, jnp.ndarray]:
+    return {
+        "host_energy_j": jnp.sum(s.host_energy, axis=-1),
+        "switch_energy_j": jnp.sum(s.switch_energy, axis=-1),
+        "total_energy_j": jnp.sum(s.host_energy, axis=-1)
+        + jnp.sum(s.switch_energy, axis=-1),
+        "makespan_s": s.time,
+    }
+
+
+def summarize(setup: SimSetup, s: SimState) -> Dict[str, np.ndarray]:
+    """Host-side convenience: full report as numpy."""
+    rep = {**job_report(setup, s), **energy_report(s)}
+    rep["stalled"] = s.stalled
+    rep["steps"] = s.steps
+    return {k: np.asarray(v) for k, v in rep.items()}

@@ -1,0 +1,3 @@
+from .pipeline import TokenPipeline, pipeline_jobs
+
+__all__ = ["TokenPipeline", "pipeline_jobs"]

@@ -1,0 +1,4 @@
+from .resilience import (FailurePlan, NodeFailure, StragglerMonitor,
+                         TrainDriver)
+
+__all__ = ["FailurePlan", "NodeFailure", "StragglerMonitor", "TrainDriver"]

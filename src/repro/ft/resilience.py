@@ -1,0 +1,120 @@
+"""Fault tolerance: failure injection, checkpoint/restart, straggler
+mitigation, elastic rescale — the host-side control loop a 1000-node run
+needs around the pure train step.
+
+On real hardware the failure signal is a heartbeat timeout (exactly the
+paper's NodeManager -> ResourceManager heartbeat); here ``FailurePlan``
+injects deterministic faults so the recovery path is unit-testable.
+
+Straggler mitigation implements the standard coordinated-checkpoint
+pattern: per-step host durations feed an EWMA; hosts slower than
+``straggler_factor`` x median for ``patience`` steps are marked and the
+driver requests an elastic rescale that drops them (data-parallel ranks
+are a pure function of (step, live-host set) — see data.pipeline).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.checkpoint import ckpt
+
+
+@dataclasses.dataclass
+class FailurePlan:
+    """Deterministic fault injection: fail step -> kind."""
+    at_steps: Dict[int, str] = dataclasses.field(default_factory=dict)
+    # kinds: "crash" (lose state, restart from ckpt),
+    #        "straggle:<seconds>" (one slow step on one host)
+
+    def check(self, step: int) -> Optional[str]:
+        return self.at_steps.get(step)
+
+
+class NodeFailure(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    n_hosts: int
+    factor: float = 2.0
+    patience: int = 3
+    ewma: float = 0.5
+    _est: Optional[np.ndarray] = None
+    _strikes: Optional[np.ndarray] = None
+
+    def observe(self, durations: Sequence[float]) -> List[int]:
+        d = np.asarray(durations, np.float64)
+        if self._est is None:
+            self._est = d.copy()
+            self._strikes = np.zeros(self.n_hosts, np.int32)
+        self._est = self.ewma * d + (1 - self.ewma) * self._est
+        med = np.median(self._est)
+        slow = self._est > self.factor * med
+        self._strikes = np.where(slow, self._strikes + 1, 0)
+        return [int(i) for i in np.nonzero(
+            self._strikes >= self.patience)[0]]
+
+
+@dataclasses.dataclass
+class TrainDriver:
+    """Checkpointed, fault-tolerant training loop around a pure step fn.
+
+    step_fn(params, opt_state, batch) -> (params, opt_state, metrics)
+    batch_fn(step) -> batch   (pure; restart/elastic safe)
+    """
+    step_fn: Callable
+    batch_fn: Callable[[int], Any]
+    ckpt_dir: str
+    ckpt_every: int = 50
+    failure_plan: FailurePlan = dataclasses.field(default_factory=FailurePlan)
+    keep_metrics: bool = True
+
+    def run(self, params, opt_state, n_steps: int,
+            start_step: int = 0) -> Tuple[Any, Any, Dict[str, Any]]:
+        step = start_step
+        history: List[Dict] = []
+        restarts = 0
+        # resume if a checkpoint exists
+        latest = ckpt.latest_step(self.ckpt_dir)
+        if latest is not None and latest > step:
+            (params, opt_state), extra = ckpt.restore(
+                self.ckpt_dir, (params, opt_state))
+            step = int(extra.get("next_step", latest))
+        while step < n_steps:
+            fault = self.failure_plan.check(step)
+            if fault == "crash":
+                # lose in-memory state; restart from latest checkpoint
+                self.failure_plan.at_steps.pop(step)
+                restarts += 1
+                latest = ckpt.latest_step(self.ckpt_dir)
+                if latest is None:
+                    raise NodeFailure(
+                        f"crash at step {step} with no checkpoint")
+                (params, opt_state), extra = ckpt.restore(
+                    self.ckpt_dir, (params, opt_state))
+                step = int(extra.get("next_step", latest))
+                continue
+            t0 = time.perf_counter()
+            if fault and fault.startswith("straggle:"):
+                time.sleep(float(fault.split(":")[1]))
+                self.failure_plan.at_steps.pop(step)
+            batch = self.batch_fn(step)
+            params, opt_state, metrics = self.step_fn(params, opt_state,
+                                                      batch)
+            dt = time.perf_counter() - t0
+            if self.keep_metrics:
+                history.append({"step": step, "dt": dt,
+                                **{k: float(np.asarray(v))
+                                   for k, v in metrics.items()}})
+            step += 1
+            if step % self.ckpt_every == 0 or step == n_steps:
+                ckpt.save(self.ckpt_dir, step, (params, opt_state),
+                          extra={"next_step": step})
+        return params, opt_state, {"history": history,
+                                   "restarts": restarts,
+                                   "final_step": step}

@@ -1,0 +1,109 @@
+"""Blockwise (flash) causal attention Pallas kernel.
+
+Grid: (batch*q_heads, num_q_blocks, num_k_blocks) — k innermost so the
+online-softmax state (m, l, acc) persists in VMEM scratch across the k
+sweep of one q block.  Causality skips fully-masked k blocks with
+``pl.when`` (no MXU work past the diagonal).
+
+Tiling: q block (bq, dh), k/v blocks (bk, dh); with dh=128 and bq=bk=128
+both matmuls are MXU-aligned.  GQA is handled by the wrapper (ops.py)
+mapping q-head -> kv-head before the call, so the kernel sees matched
+head streams.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               scale: float, bq: int, bk: int, causal: bool,
+               q_offset: int, n_kblocks: int, skv: int):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    qb = pl.program_id(1)
+    q_start = qb * bq + q_offset            # absolute position of q row 0
+    k_start = kb * bk
+
+    # skip k blocks that lie entirely above the causal diagonal
+    run = (k_start <= q_start + bq - 1) if causal else (kb >= 0)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)            # [bq, dh]
+        k = k_ref[0].astype(jnp.float32)            # [bk, dh]
+        v = v_ref[0].astype(jnp.float32)            # [bk, dh]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < skv                           # kv padding
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            mask = mask & (qpos >= kpos)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]                          # [bq, 1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                       # [bq, bk]
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        m_scr[...] = m_new
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(kb == n_kblocks - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@partial(jax.jit,
+         static_argnames=("causal", "bq", "bk", "interpret", "q_offset"))
+def flash_attention_bhsd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                         causal: bool = True, q_offset: int = 0,
+                         bq: int = 128, bk: int = 128,
+                         interpret: bool = False) -> jnp.ndarray:
+    """q: [BH, Sq, Dh]; k/v: [BH, Skv, Dh] (kv already expanded per q head).
+
+    Returns [BH, Sq, Dh].  Sequence dims padded to block multiples inside.
+    """
+    bh, sq, dh = q.shape
+    skv = k.shape[1]
+    bq_, bk_ = min(bq, sq), min(bk, skv)
+    sqp, skp = -(-sq // bq_) * bq_, -(-skv // bk_) * bk_
+    qp = jnp.pad(q, ((0, 0), (0, sqp - sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, skp - skv), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, skp - skv), (0, 0)))
+    n_kblocks = skp // bk_
+    grid = (bh, sqp // bq_, n_kblocks)
+    out = pl.pallas_call(
+        partial(_fa_kernel, scale=dh ** -0.5, bq=bq_, bk=bk_, causal=causal,
+                q_offset=q_offset, n_kblocks=n_kblocks, skv=skv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq_, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk_, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk_, dh), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq_, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sqp, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq_, 1), jnp.float32),    # m
+            pltpu.VMEM((bq_, 1), jnp.float32),    # l
+            pltpu.VMEM((bq_, dh), jnp.float32),   # acc
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :sq]

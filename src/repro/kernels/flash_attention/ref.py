@@ -1,0 +1,2 @@
+"""Oracle: the model zoo's naive full-materialization attention."""
+from repro.models.attention import naive_attention  # noqa: F401

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the chunked selective scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(a: jnp.ndarray, b: jnp.ndarray,
+                       c: jnp.ndarray) -> jnp.ndarray:
+    """Sequential-scan reference.  a,b: [B,S,D,N]; c: [B,S,N] -> [B,S,D]."""
+    def step(h, ab):
+        at, bt, ct = ab
+        h = at * h + bt                               # [B, D, N]
+        y = jnp.sum(h * ct[:, None, :], axis=-1)      # [B, D]
+        return h, y
+
+    bsz, s, d, n = a.shape
+    h0 = jnp.zeros((bsz, d, n), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, h0, (a.transpose(1, 0, 2, 3).astype(jnp.float32),
+                   b.transpose(1, 0, 2, 3).astype(jnp.float32),
+                   c.transpose(1, 0, 2).astype(jnp.float32)))
+    return ys.transpose(1, 0, 2)                      # [B, S, D]

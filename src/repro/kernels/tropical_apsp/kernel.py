@@ -1,0 +1,65 @@
+"""Tropical (min-plus) matmul Pallas kernel — the SDN controller's APSP.
+
+Dijkstra's relaxation is sequential pointer-chasing; on TPU we recast
+all-pairs shortest paths as log2(diameter) squarings in the (min, +)
+semiring:  D'[i,j] = min_k D[i,k] + D[k,j].
+
+One squaring is a dense "matmul" with (+ -> min, * -> +): perfectly
+systolic-shaped, tiled exactly like an MXU matmul.  BlockSpec tiles
+(bm, bk) x (bk, bn) operand blocks into VMEM; the K-axis is the innermost
+grid dim so the output block stays resident while partial mins accumulate.
+
+TPU lowering note: min-plus contractions run on the VPU (vector min/add),
+not the MXU — but the tiling/data-movement pattern (and roofline) is that
+of a matmul, so the same block shapes apply (multiples of 8x128 lanes).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 3.4e38  # stand-in for +inf (python float so the kernel body does not
+              # capture a traced constant; finite BIG is fastmath-robust)
+
+
+def _minplus_kernel(x_ref, y_ref, o_ref):
+    """One (bm, bn) output block; K-grid accumulates mins in-place."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, BIG)
+
+    x = x_ref[...]                       # [bm, bk]
+    y = y_ref[...]                       # [bk, bn]
+    # broadcast-add then reduce-min over k: [bm, bk, bn] -> [bm, bn]
+    s = x[:, :, None] + y[None, :, :]
+    o_ref[...] = jnp.minimum(o_ref[...], jnp.min(s, axis=1))
+
+
+@partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def minplus_matmul(x: jnp.ndarray, y: jnp.ndarray, *, bm: int = 128,
+                   bn: int = 128, bk: int = 128,
+                   interpret: bool = False) -> jnp.ndarray:
+    """Z[i,j] = min_k X[i,k] + Y[k,j].  Pads to block multiples with BIG."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    mp, np_, kp = -(-m // bm) * bm, -(-n // bn) * bn, -(-k // bk) * bk
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)), constant_values=BIG)
+    yp = jnp.pad(y, ((0, kp - k), (0, np_ - n)), constant_values=BIG)
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        _minplus_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(xp.astype(jnp.float32), yp.astype(jnp.float32))
+    return out[:m, :n]

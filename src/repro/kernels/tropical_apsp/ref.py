@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the min-plus matmul / APSP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def minplus_matmul_ref(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return jnp.min(x[:, :, None].astype(jnp.float32)
+                   + y[None, :, :].astype(jnp.float32), axis=1)
+
+
+def apsp_ref(adj: jnp.ndarray, steps: int | None = None) -> jnp.ndarray:
+    """All-pairs shortest paths by repeated squaring (pure jnp)."""
+    n = adj.shape[0]
+    steps = steps if steps is not None else max(1, int(np.ceil(np.log2(n))))
+    d = adj.astype(jnp.float32)
+    for _ in range(steps):
+        d = minplus_matmul_ref(d, d)
+    return d

@@ -1,0 +1,289 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the exact step function a production run jits
+(train_step / prefill / decode_step), with the sharding rules from
+repro.sharding, lowers it against ShapeDtypeStruct inputs (no allocation),
+compiles, and records memory_analysis / cost_analysis / collective stats
+for the roofline table.
+
+Roofline counts are DEPTH-EXTRAPOLATED: XLA cost analysis counts a
+lax.scan body once, so each cell also compiles depth-1 and depth-2
+variants; per-layer counts = (depth2 - depth1), total = outside +
+per-layer x L.  The FULL-depth compile still proves sharding + memory.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  python -m repro.launch.dryrun --all --multi-pod both --out experiments/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applies
+from repro.models import get_model
+from repro.models.registry import decode_input_specs, prefill_input_specs, \
+    train_input_specs
+from repro.roofline import analyze_raw, count_active_params, count_params
+from repro.roofline.terms import peak_memory, raw_counts
+from repro.sharding import batch_specs, cache_specs_tree, param_specs
+from repro.train import AdamWConfig, make_train_step
+from repro.train import optim
+from .mesh import make_production_mesh, mesh_chips
+
+
+def _named(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _opt_specs(pspecs, params_sds, mesh):
+    from repro.sharding.rules import opt_state_specs
+    mspecs = opt_state_specs(params_sds, mesh)   # ZeRO: +data-axis shard
+    err = jax.tree_util.tree_map(lambda _: P(), params_sds)
+    return optim.OptState(step=P(), mu=mspecs, nu=mspecs, err=err)
+
+
+def depth_units(cfg) -> int:
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.attn_every
+    return cfg.n_layers
+
+
+def with_units(cfg, u: int):
+    if cfg.family == "hybrid":
+        return dataclasses.replace(cfg, n_layers=u * cfg.attn_every)
+    if cfg.family == "audio":
+        return dataclasses.replace(cfg, n_layers=u, n_enc_layers=u)
+    return dataclasses.replace(cfg, n_layers=u)
+
+
+def lower_one(cfg, shape, mesh, *, backend: str, remat: bool,
+              microbatch: int):
+    """Lower + compile one step function for one cfg/shape/mesh."""
+    if shape.kind == "decode" and cfg.fsdp:
+        # decode steps amortize ZERO weight traffic per token: run them
+        # Megatron-TP (weights stay sharded; tiny activations all-reduce)
+        cfg = dataclasses.replace(cfg, fsdp=False)
+    api = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params_sds = jax.eval_shape(api.init, key)
+    pspecs = param_specs(params_sds, mesh)
+    p_sh = _named(mesh, pspecs)
+
+    if shape.kind == "train":
+        batch_sds = train_input_specs(cfg, shape.global_batch, shape.seq_len)
+        ocfg = AdamWConfig()
+        opt_sds = jax.eval_shape(partial(optim.init, ocfg), params_sds)
+        o_sh = _named(mesh, _opt_specs(pspecs, params_sds, mesh))
+        b_sh = _named(mesh, batch_specs(batch_sds, mesh))
+        step = make_train_step(api, ocfg, backend=backend, remat=remat,
+                               microbatch=microbatch)
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                              out_shardings=(p_sh, o_sh, None),
+                              donate_argnums=(0, 1)
+                              ).lower(params_sds, opt_sds, batch_sds)
+    elif shape.kind == "prefill":
+        batch_sds = prefill_input_specs(cfg, shape.global_batch,
+                                        shape.seq_len)
+        cache_sds = jax.eval_shape(
+            lambda: api.init_cache(shape.global_batch, shape.seq_len))
+        c_sh = _named(mesh, cache_specs_tree(cache_sds, mesh))
+        b_sh = _named(mesh, batch_specs(batch_sds, mesh))
+
+        def prefill_step(params, batch, cache):
+            return api.prefill(params, batch, cache, backend=backend)
+
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(prefill_step,
+                              in_shardings=(p_sh, b_sh, c_sh),
+                              out_shardings=(None, c_sh),
+                              donate_argnums=(2,)
+                              ).lower(params_sds, batch_sds, cache_sds)
+    else:  # decode
+        cache_sds = jax.eval_shape(
+            lambda: api.init_cache(shape.global_batch, shape.seq_len))
+        c_sh = _named(mesh, cache_specs_tree(cache_sds, mesh))
+        extra_sds = decode_input_specs(cfg, shape.global_batch)
+        e_sh = _named(mesh, batch_specs(extra_sds, mesh))
+        if cfg.family == "vlm":
+            def decode(params, extra, cache):
+                return api.decode_step(params, None, cache,
+                                       batch_extra=extra)
+        else:
+            def decode(params, extra, cache):
+                return api.decode_step(params, extra["tokens"], cache)
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(decode, in_shardings=(p_sh, e_sh, c_sh),
+                              out_shardings=(None, c_sh),
+                              donate_argnums=(2,)
+                              ).lower(params_sds, extra_sds, cache_sds)
+    return lowered.compile()
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               backend: str = "chunked", remat: bool = True,
+               microbatch: int = 0, mesh=None,
+               extrapolate: bool = True,
+               cfg_override=None) -> Tuple[Any, Dict[str, Any]]:
+    """Compile the full cell + depth-extrapolated roofline counts."""
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applies(cfg, shape_name)
+    if not ok:
+        raise ValueError(f"N/A cell: {why}")
+    mesh = mesh or make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_chips(mesh)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    kw = dict(backend=backend, remat=remat, microbatch=microbatch)
+
+    t0 = time.time()
+    compiled = lower_one(cfg, shape, mesh, **kw)
+    t_compile = time.time() - t0
+
+    units = depth_units(cfg)
+    if extrapolate and units > 2:
+        from repro.util import unrolled_counting
+        with unrolled_counting():
+            c1 = lower_one(with_units(cfg, 1), shape, mesh, **kw)
+            c2 = lower_one(with_units(cfg, 2), shape, mesh, **kw)
+        r1 = raw_counts(c1, chips=chips)
+        r2 = raw_counts(c2, chips=chips)
+        per = {k: max(0.0, r2[k] - r1[k])
+               for k in ("flops", "bytes", "wire_bytes")}
+        outside = {k: max(0.0, r1[k] - per[k])
+                   for k in ("flops", "bytes", "wire_bytes")}
+        tot = {k: outside[k] + per[k] * units
+               for k in ("flops", "bytes", "wire_bytes")}
+        counts = raw_counts(compiled, chips=chips)["counts"]
+        extrap = True
+        del c1, c2
+    else:
+        rc = raw_counts(compiled, chips=chips)
+        tot = {k: rc[k] for k in ("flops", "bytes", "wire_bytes")}
+        counts = rc["counts"]
+        extrap = False
+
+    api = get_model(cfg)
+    params_sds = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    params_n = count_params(params_sds)
+    active_n = count_active_params(params_sds, cfg)
+    from repro.roofline.terms import model_flops_cell
+    mf = model_flops_cell(cfg, shape, active_n)
+    rep = analyze_raw(flops=tot["flops"], byts=tot["bytes"],
+                      wire=tot["wire_bytes"], counts=counts,
+                      arch=arch, shape=shape_name, mesh_name=mesh_name,
+                      chips=chips, model_flops=mf,
+                      peak_bytes=peak_memory(compiled))
+    mem = compiled.memory_analysis()
+    info = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "chips": chips, "params": params_n, "active_params": active_n,
+        "t_compile_s": round(t_compile, 2),
+        "depth_extrapolated": extrap,
+        "backend": backend, "remat": remat, "microbatch": microbatch,
+        "memory": {
+            "argument_gib": getattr(mem, "argument_size_in_bytes", 0) / 2**30,
+            "output_gib": getattr(mem, "output_size_in_bytes", 0) / 2**30,
+            "temp_gib": getattr(mem, "temp_size_in_bytes", 0) / 2**30,
+            "alias_gib": getattr(mem, "alias_size_in_bytes", 0) / 2**30,
+        },
+        "roofline": rep.row(),
+    }
+    return compiled, info
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["off", "on", "both"],
+                    default="off")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--backend", default="chunked")
+    ap.add_argument("--remat", type=int, default=1)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--no-extrapolate", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args(argv)
+
+    cells = ([(a, s) for a in ARCH_IDS for s in SHAPES] if args.all
+             else [(args.arch, args.shape)])
+    pods = {"off": [False], "on": [True], "both": [False, True]}[
+        args.multi_pod]
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch, shape in cells:
+        cfg = get_config(arch)
+        ok, why = shape_applies(cfg, shape)
+        for mp in pods:
+            tag = f"{arch}_{shape}_{'2x16x16' if mp else '16x16'}"
+            path = os.path.join(args.out, tag + ".json")
+            if args.skip_existing and os.path.exists(path):
+                try:
+                    st = json.load(open(path)).get("status")
+                except Exception:
+                    st = None
+                if st in ("ok", "n/a"):
+                    print(f"[skip] {tag}", flush=True)
+                    continue
+            if not ok:
+                with open(path, "w") as f:
+                    json.dump({"arch": arch, "shape": shape,
+                               "mesh": "2x16x16" if mp else "16x16",
+                               "status": "n/a", "reason": why}, f, indent=1)
+                print(f"[n/a ] {tag}: {why}")
+                continue
+            try:
+                # default microbatching keeps train cells inside 16 GB HBM
+                # (see EXPERIMENTS.md §Dry-run): MoE capacity buffers scale
+                # with global tokens-per-microstep, dense remat with
+                # tokens-per-chip.
+                microbatch = args.microbatch
+                # (EP MoE keeps dispatch buffers local-token-sized, so MoE
+                # train cells no longer need microbatching — see moe_ep.py)
+                compiled, info = lower_cell(
+                    arch, shape, multi_pod=mp, backend=args.backend,
+                    remat=bool(args.remat), microbatch=microbatch,
+                    extrapolate=not args.no_extrapolate)
+                info["status"] = "ok"
+                with open(path, "w") as f:
+                    json.dump(info, f, indent=1, default=str)
+                r = info["roofline"]
+                print(f"[ok  ] {tag}: compile={info['t_compile_s']}s "
+                      f"dom={r['dominant']} c/m/coll="
+                      f"{r['compute_s']:.3f}/{r['memory_s']:.3f}/"
+                      f"{r['collective_s']:.3f}s "
+                      f"useful={r['useful_ratio']:.2f} "
+                      f"mem={info['memory']['temp_gib']:.2f}GiB/chip",
+                      flush=True)
+                del compiled
+            except Exception as e:  # noqa: BLE001 — report into the table
+                failures += 1
+                with open(path, "w") as f:
+                    json.dump({"arch": arch, "shape": shape,
+                               "mesh": "2x16x16" if mp else "16x16",
+                               "status": "fail",
+                               "error": traceback.format_exc()}, f, indent=1)
+                print(f"[FAIL] {tag}: {type(e).__name__}: {e}", flush=True)
+    print(f"dry-run done, {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

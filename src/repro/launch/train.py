@@ -1,0 +1,89 @@
+"""Production training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b \
+      --steps 200 --batch 8 --seq 256 --smoke
+
+On a real TPU slice this process runs once per host (jax.distributed
+initializes from the environment); on this CPU container ``--smoke`` uses
+the reduced config on one device.  The loop is the fault-tolerant
+TrainDriver: deterministic data, periodic atomic checkpoints, crash
+restart, straggler monitoring.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.data import TokenPipeline
+from repro.ft import FailurePlan, TrainDriver
+from repro.models import get_model
+from repro.train import AdamWConfig, make_train_step
+from repro.train import init as opt_init
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen3-4b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--ckpt-dir", default="experiments/ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--crash-at", type=int, default=-1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if cfg.family in ("vlm", "audio") and not args.smoke:
+        raise SystemExit("frontend-stub families train via the dry-run "
+                         "path; use --smoke for a CPU run")
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    n = sum(int(np.prod(l.shape))
+            for l in jax.tree_util.tree_leaves(params))
+    print(f"[train] arch={cfg.name} params={n / 1e6:.1f}M "
+          f"batch={args.batch}x{args.seq}")
+
+    ocfg = AdamWConfig(lr_peak=args.lr, total_steps=args.steps,
+                       warmup_steps=max(1, args.steps // 20),
+                       compress=args.compress_grads)
+    opt = opt_init(ocfg, params)
+    step = jax.jit(make_train_step(api, ocfg, microbatch=args.microbatch),
+                   donate_argnums=(0, 1))
+    pipe = TokenPipeline(vocab=cfg.vocab, batch=args.batch, seq=args.seq,
+                         n_hosts=jax.process_count(),
+                         host_id=jax.process_index())
+
+    def batch_fn(s):
+        b = pipe.batch_at(s)
+        if cfg.family == "audio":
+            b["enc_embeds"] = np.zeros(
+                (args.batch, cfg.enc_seq, cfg.d_model), np.float32)
+        return {k: jnp.asarray(v) for k, v in b.items()}
+
+    plan = FailurePlan(at_steps={args.crash_at: "crash"}
+                       if args.crash_at >= 0 else {})
+    drv = TrainDriver(step_fn=step, batch_fn=batch_fn,
+                      ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                      failure_plan=plan)
+    t0 = time.time()
+    params, opt, info = drv.run(params, opt, args.steps)
+    hist = info["history"]
+    if hist:
+        print(f"[train] {len(hist)} steps in {time.time() - t0:.0f}s, "
+              f"loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}, "
+              f"restarts={info['restarts']}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,7 @@
+"""Pure-JAX model zoo: dense/MoE/SSM/hybrid/VLM/enc-dec LM backbones."""
+from .layers import ModelConfig
+from .registry import (ModelApi, decode_input_specs, get_model,
+                       prefill_input_specs, train_input_specs)
+
+__all__ = ["ModelConfig", "ModelApi", "get_model", "train_input_specs",
+           "prefill_input_specs", "decode_input_specs"]

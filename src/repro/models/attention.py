@@ -1,0 +1,140 @@
+"""Attention backends: naive, chunked (flash-style online softmax), decode.
+
+All take q [B,S,H,Dh], k/v [B,Skv,KV,Dh] with GQA (H = G*KV).  The chunked
+backend is the memory-safe default for long sequences; the Pallas kernel in
+``repro.kernels.flash_attention`` is the TPU fast path and is numerically
+validated against ``naive`` (its ref.py re-exports it).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import (activation_hint, fsdp_params,
+                                  replicate_hint, shard_hint)
+
+NEG_INF = -1e30
+
+
+def _expand_kv(k: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """[B,S,KV,Dh] -> [B,S,H,Dh] by repeating each kv head G times."""
+    b, s, kv, dh = k.shape
+    g = n_heads // kv
+    return jnp.repeat(k, g, axis=2) if g > 1 else k
+
+
+def naive_attention(q, k, v, *, causal: bool = True,
+                    q_offset: int | jnp.ndarray = 0) -> jnp.ndarray:
+    """Reference full-materialization attention (oracle for kernels)."""
+    h = q.shape[2]
+    k, v = _expand_kv(k, h), _expand_kv(v, h)
+    scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        qpos = jnp.arange(sq)[:, None] + q_offset
+        kpos = jnp.arange(sk)[None, :]
+        logits = jnp.where(qpos >= kpos, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), v)
+
+
+def chunked_attention(q, k, v, *, causal: bool = True,
+                      q_offset: int | jnp.ndarray = 0,
+                      block_k: int = 512) -> jnp.ndarray:
+    """Flash-style attention: scan over KV blocks with running (m, l, acc).
+
+    Never materializes the [S,S] score matrix (O(S·block_k) memory) and
+    keeps kv heads GROUPED — no jnp.repeat expansion of K/V (a 4.3 GB/chip
+    transient for the 72B decode cells).
+    """
+    b, sq, h, dh = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    # gathered-KV attention: under sequence parallelism q stays S-sharded
+    # while k/v are gathered once per layer; pinning them also stops GSPMD
+    # from splitting the contraction over an idle axis (huge partial-sum
+    # all-reduces of the [B,KV,G,Sq,bk] logits otherwise).
+    k = shard_hint(k, ("pod", "data"), None, None, None)
+    v = shard_hint(v, ("pod", "data"), None, None, None)
+    qg = q.reshape(b, sq, kv, g, dh)
+    nblk = -(-skv // block_k)
+    pad = nblk * block_k - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(b, nblk, block_k, kv, dh).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nblk, block_k, kv, dh).transpose(1, 0, 2, 3, 4)
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    qpos = jnp.arange(sq)[:, None] + q_offset                     # [Sq, 1]
+
+    def body(carry, blk):
+        m, l, acc, kidx = carry                  # m,l: [B,KV,G,Sq]
+        kblk, vblk = blk                         # [B,bk,KV,Dh]
+        logits = jnp.einsum("bqngd,bknd->bngqk", qg, kblk,
+                            preferred_element_type=jnp.float32) * scale
+        kpos = kidx * block_k + jnp.arange(block_k)[None, :]      # [1, bk]
+        mask = kpos <= (skv - 1)                                  # pad mask
+        if causal:
+            mask = mask & (qpos >= kpos)
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        m_blk = jnp.max(logits, axis=-1)                          # [B,KV,G,Sq]
+        m_new = jnp.maximum(m, m_blk)
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])                    # [B,KV,G,Sq,bk]
+        l = l * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bngqk,bknd->bngqd", p.astype(vblk.dtype), vblk)
+        acc = acc * alpha[..., None] + pv.astype(jnp.float32)
+        return (m_new, l, acc, kidx + 1), None
+
+    m0 = jnp.full((b, kv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kv, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, kv, g, sq, dh), jnp.float32)
+    from repro.util import scan as _scan
+    (m, l, acc, _), _ = _scan(body, (m0, l0, acc0, jnp.int32(0)), (kb, vb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]   # [B,KV,G,Sq,Dh]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len) -> jnp.ndarray:
+    """Single-step decode: q [B,1,H,Dh] vs cache [B,Smax,KV,Dh].
+
+    ``cache_len`` [B] or scalar = number of valid cache entries (the new
+    token's k/v must already be written at position cache_len-1).
+    Grouped-head form: K/V are never expanded to H heads.
+    """
+    b, _, h, dh = q.shape
+    kv = k_cache.shape[2]
+    g = h // kv
+    qg = q.reshape(b, kv, g, dh)
+    # match the cache's Dh sharding: resharding q costs ~MBs, while GSPMD's
+    # alternative (remat the 32k-context cache to head sharding) costs GBs
+    # per layer ("Involuntary full rematerialization" warning).
+    qg = shard_hint(qg, None, None, None, "model")
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    logits = jnp.einsum("bngd,bsnd->bngs", qg, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    kpos = jnp.arange(k_cache.shape[1])
+    valid = kpos[None, :] < jnp.reshape(jnp.asarray(cache_len), (-1, 1))
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bngs,bsnd->bngd", w.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, 1, h, dh)
+
+
+def attention(q, k, v, *, causal: bool = True, q_offset=0,
+              backend: str = "chunked", block_k: int = 512) -> jnp.ndarray:
+    if backend == "naive":
+        return naive_attention(q, k, v, causal=causal, q_offset=q_offset)
+    if backend == "chunked":
+        return chunked_attention(q, k, v, causal=causal, q_offset=q_offset,
+                                 block_k=block_k)
+    if backend == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention(q, k, v, causal=causal,
+                                      q_offset=q_offset)
+    raise ValueError(f"unknown attention backend {backend!r}")

@@ -1,0 +1,214 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+The conv/log-mel frontend is a STUB per the assignment: ``input_specs``
+supplies precomputed frame embeddings ``enc_embeds`` [B, enc_seq, D].
+Encoder: bidirectional self-attention; decoder: causal self-attention +
+cross-attention over the encoder output.  Decode keeps a KV cache for the
+decoder self-attention plus the (static) encoder K/V.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import (activation_hint, fsdp_params,
+                                  replicate_hint, shard_hint)
+
+from repro.util import scan as uscan
+
+from . import attention as attn_mod
+from .layers import (ModelConfig, Params, apply_rope, attn_init, embed_apply,
+                     embed_init, mlp_apply, mlp_init, out_project,
+                     qkv_project, rmsnorm_apply, rmsnorm_init, stack_params,
+                     unembed_apply, unembed_init)
+from .transformer import _positions
+
+
+def encdec_init(key, cfg: ModelConfig) -> Params:
+    n_enc = cfg.n_enc_layers or cfg.n_layers
+    ks = jax.random.split(key, n_enc + 3 * cfg.n_layers + 3)
+    enc = [{
+        "ln1": rmsnorm_init(cfg.d_model, cfg.dtype),
+        "attn": attn_init(ks[i], cfg),
+        "ln2": rmsnorm_init(cfg.d_model, cfg.dtype),
+        "mlp": mlp_init(ks[n_enc + i], cfg),
+    } for i in range(n_enc)]
+    dec = [{
+        "ln1": rmsnorm_init(cfg.d_model, cfg.dtype),
+        "self_attn": attn_init(ks[2 * n_enc + 3 * i], cfg),
+        "ln_x": rmsnorm_init(cfg.d_model, cfg.dtype),
+        "cross_attn": attn_init(ks[2 * n_enc + 3 * i + 1], cfg),
+        "ln2": rmsnorm_init(cfg.d_model, cfg.dtype),
+        "mlp": mlp_init(ks[2 * n_enc + 3 * i + 2], cfg),
+    } for i in range(cfg.n_layers)]
+    return {
+        "embed": embed_init(ks[-3], cfg),
+        "enc_layers": stack_params(enc),
+        "enc_norm": rmsnorm_init(cfg.d_model, cfg.dtype),
+        "dec_layers": stack_params(dec),
+        "final_norm": rmsnorm_init(cfg.d_model, cfg.dtype),
+        "unembed": unembed_init(ks[-2], cfg),
+    }
+
+
+def encode(params: Params, enc_embeds: jnp.ndarray, cfg: ModelConfig,
+           *, backend: str = "chunked", remat: bool = True) -> jnp.ndarray:
+    x = enc_embeds.astype(cfg.dtype)
+    batch = {"embeds": x}
+
+
+    def one(x, lp):
+        lp = {**lp, "attn": fsdp_params(lp["attn"], cfg),
+              "mlp": fsdp_params(lp["mlp"], cfg)}
+        h = rmsnorm_apply(lp["ln1"], x)
+        q, k, v = qkv_project(lp["attn"], h, cfg)
+        pos = _positions(batch, q.shape[1], 0)
+        q, k = apply_rope(q, pos, cfg.rope_theta), apply_rope(k, pos, cfg.rope_theta)
+        o = attn_mod.attention(q, k, v, causal=False, backend=backend)
+        x = x + out_project(lp["attn"], o)
+        x = x + mlp_apply(lp["mlp"], rmsnorm_apply(lp["ln2"], x))
+        return activation_hint(x), None
+
+    f = jax.checkpoint(one, prevent_cse=False) if remat else one
+    x, _ = uscan(f, x, params["enc_layers"])
+    return rmsnorm_apply(params["enc_norm"], x)
+
+
+def _dec_layer(lp, x, enc_out, cfg, batch, offset, *, backend):
+    lp = {**lp, "self_attn": fsdp_params(lp["self_attn"], cfg),
+          "cross_attn": fsdp_params(lp["cross_attn"], cfg),
+          "mlp": fsdp_params(lp["mlp"], cfg)}
+    h = rmsnorm_apply(lp["ln1"], x)
+    q, k, v = qkv_project(lp["self_attn"], h, cfg)
+    pos = _positions(batch, q.shape[1], offset)
+    q, k = apply_rope(q, pos, cfg.rope_theta), apply_rope(k, pos, cfg.rope_theta)
+    o = attn_mod.attention(q, k, v, causal=True, q_offset=offset,
+                           backend=backend)
+    x = x + out_project(lp["self_attn"], o)
+    h = rmsnorm_apply(lp["ln_x"], x)
+    q, k, v = qkv_project(lp["cross_attn"], h, cfg, kv_x=enc_out)
+    o = attn_mod.attention(q, k, v, causal=False, backend=backend)
+    x = x + out_project(lp["cross_attn"], o)
+    x = x + mlp_apply(lp["mlp"], rmsnorm_apply(lp["ln2"], x))
+    return x
+
+
+def encdec_apply(params: Params, batch: Dict[str, jnp.ndarray],
+                 cfg: ModelConfig, *, backend: str = "chunked",
+                 remat: bool = True, logits: bool = True
+                 ) -> Dict[str, jnp.ndarray]:
+    """batch: enc_embeds [B,Se,D] + tokens [B,Sd]."""
+    enc_out = encode(params, batch["enc_embeds"], cfg, backend=backend,
+                     remat=remat)
+    x = embed_apply(params["embed"], batch["tokens"])
+
+
+    def one(x, lp):
+        x = _dec_layer(lp, x, enc_out, cfg, batch, 0, backend=backend)
+        return activation_hint(x), None
+
+    f = jax.checkpoint(one, prevent_cse=False) if remat else one
+    x, _ = uscan(f, x, params["dec_layers"])
+    x = rmsnorm_apply(params["final_norm"], x)
+    out = {"hidden": x, "aux_loss": jnp.float32(0.0)}
+    if logits:
+        out["logits"] = unembed_apply(params["unembed"], params["embed"],
+                                      x, cfg)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# serve
+# ---------------------------------------------------------------------------
+
+
+def encdec_init_cache(cfg: ModelConfig, batch_size: int,
+                      max_len: int) -> Params:
+    kv = (cfg.n_layers, batch_size, max_len, cfg.n_kv, cfg.d_head)
+    enc_kv = (cfg.n_layers, batch_size, cfg.enc_seq, cfg.n_kv, cfg.d_head)
+    return {
+        "k": jnp.zeros(kv, cfg.dtype), "v": jnp.zeros(kv, cfg.dtype),
+        "enc_k": jnp.zeros(enc_kv, cfg.dtype),
+        "enc_v": jnp.zeros(enc_kv, cfg.dtype),
+        "len": jnp.zeros((batch_size,), jnp.int32),
+    }
+
+
+def encdec_prefill(params: Params, batch: Dict[str, jnp.ndarray],
+                   cfg: ModelConfig, cache: Params, *,
+                   backend: str = "chunked") -> Tuple[jnp.ndarray, Params]:
+    """Encode audio, precompute cross K/V, run decoder prompt."""
+    enc_out = encode(params, batch["enc_embeds"], cfg, backend=backend,
+                     remat=False)
+    x = embed_apply(params["embed"], batch["tokens"])
+    s = x.shape[1]
+
+    def one(x, scanned):
+        lp, kc, vc, ekc, evc = scanned
+        # precompute encoder K/V for this layer's cross-attention
+        _, ek, ev = qkv_project(lp["cross_attn"], enc_out, cfg, kv_x=enc_out)
+        h = rmsnorm_apply(lp["ln1"], x)
+        q, k, v = qkv_project(lp["self_attn"], h, cfg)
+        pos = _positions(batch, q.shape[1], 0)
+        q2 = apply_rope(q, pos, cfg.rope_theta)
+        k2 = apply_rope(k, pos, cfg.rope_theta)
+        k2w = shard_hint(k2, ("pod", "data"), None, None, "model")
+        vw = shard_hint(v, ("pod", "data"), None, None, "model")
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k2w.astype(kc.dtype), 0, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, vw.astype(vc.dtype), 0, 1)
+        o = attn_mod.attention(q2, k2, v, causal=True, backend=backend)
+        x = x + out_project(lp["self_attn"], o)
+        hq = rmsnorm_apply(lp["ln_x"], x)
+        qx, _, _ = qkv_project(lp["cross_attn"], hq, cfg)
+        o = attn_mod.attention(qx, ek, ev, causal=False, backend=backend)
+        x = x + out_project(lp["cross_attn"], o)
+        x = x + mlp_apply(lp["mlp"], rmsnorm_apply(lp["ln2"], x))
+        return x, (kc, vc, ek.astype(ekc.dtype), ev.astype(evc.dtype))
+
+    x, (k_new, v_new, ek, ev) = uscan(
+        one, x, (params["dec_layers"], cache["k"], cache["v"],
+                 cache["enc_k"], cache["enc_v"]))
+    x = rmsnorm_apply(params["final_norm"], x[:, -1:])
+    logits = unembed_apply(params["unembed"], params["embed"], x, cfg)
+    return logits, {"k": k_new, "v": v_new, "enc_k": ek, "enc_v": ev,
+                    "len": jnp.full_like(cache["len"], s)}
+
+
+def encdec_decode_step(params: Params, tokens: jnp.ndarray, cache: Params,
+                       cfg: ModelConfig) -> Tuple[jnp.ndarray, Params]:
+    x = embed_apply(params["embed"], tokens)
+    pos = cache["len"]
+    batch = {"tokens": tokens}
+
+    def one(x, scanned):
+        lp, kc, vc, ekc, evc = scanned
+        h = rmsnorm_apply(lp["ln1"], x)
+        q, k, v = qkv_project(lp["self_attn"], h, cfg)
+        ppos = _positions(batch, 1, pos)
+        q = apply_rope(q, ppos, cfg.rope_theta)
+        k = apply_rope(k, ppos, cfg.rope_theta)
+        b = k.shape[0]
+        k = shard_hint(k, ("pod", "data"), None, None, "model")
+        v = shard_hint(v, ("pod", "data"), None, None, "model")
+        idx = jnp.reshape(pos, (b, 1))
+        kc = kc.at[jnp.arange(b)[:, None], idx].set(k.astype(kc.dtype))
+        vc = vc.at[jnp.arange(b)[:, None], idx].set(v.astype(vc.dtype))
+        o = attn_mod.decode_attention(q, kc, vc, pos + 1)
+        x = x + out_project(lp["self_attn"], o)
+        hq = rmsnorm_apply(lp["ln_x"], x)
+        qx, _, _ = qkv_project(lp["cross_attn"], hq, cfg)
+        o = attn_mod.decode_attention(qx, ekc, evc,
+                                      jnp.full((b,), ekc.shape[1]))
+        x = x + out_project(lp["cross_attn"], o)
+        x = x + mlp_apply(lp["mlp"], rmsnorm_apply(lp["ln2"], x))
+        return x, (kc, vc)
+
+    x, (k_new, v_new) = uscan(
+        one, x, (params["dec_layers"], cache["k"], cache["v"],
+                 cache["enc_k"], cache["enc_v"]))
+    x = rmsnorm_apply(params["final_norm"], x)
+    logits = unembed_apply(params["unembed"], params["embed"], x, cfg)
+    return logits, {"k": k_new, "v": v_new, "enc_k": cache["enc_k"],
+                    "enc_v": cache["enc_v"], "len": cache["len"] + 1}

@@ -1,0 +1,258 @@
+"""Jamba-style hybrid: Mamba + attention interleaved 1:7, MoE every 2 layers.
+
+The layer sequence has period ``attn_every`` (one attention layer per
+period, position attn_every-1; all others Mamba).  MoE replaces the MLP on
+every ``moe_every``-th layer.  Because the period structure is static, we
+stack params PER PERIOD and ``lax.scan`` over periods — uniform pytrees,
+O(1)-in-depth compile, heterogeneous layers inside the (unrolled) period.
+
+Decode carries BOTH cache kinds: SSM state for mamba layers (O(1)) and a KV
+cache for the few attention layers — why jamba runs long_500k.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import (activation_hint, fsdp_params,
+                                  replicate_hint, shard_hint)
+
+from repro.util import scan as uscan
+
+from . import attention as attn_mod
+from .layers import (ModelConfig, Params, apply_rope, attn_init, embed_apply,
+                     embed_init, mlp_apply, mlp_init, out_project,
+                     qkv_project, rmsnorm_apply, rmsnorm_init, stack_params,
+                     unembed_apply, unembed_init)
+from .moe import moe_apply, moe_init
+from .ssm import (mamba_apply, mamba_cache_init, mamba_decode_step,
+                  mamba_init)
+from .transformer import _positions
+
+
+def _is_attn(cfg: ModelConfig, layer: int) -> bool:
+    return layer % cfg.attn_every == cfg.attn_every - 1
+
+
+def n_periods(cfg: ModelConfig) -> int:
+    assert cfg.n_layers % cfg.attn_every == 0
+    return cfg.n_layers // cfg.attn_every
+
+
+def hybrid_init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, cfg.n_layers * 2 + 3)
+    periods = []
+    for p0 in range(n_periods(cfg)):
+        period = []
+        for i in range(cfg.attn_every):
+            layer = p0 * cfg.attn_every + i
+            kk = ks[layer]
+            lp: Params = {"ln1": rmsnorm_init(cfg.d_model, cfg.dtype),
+                          "ln2": rmsnorm_init(cfg.d_model, cfg.dtype)}
+            if _is_attn(cfg, layer):
+                lp["attn"] = attn_init(kk, cfg)
+            else:
+                lp["mamba"] = mamba_init(kk, cfg)
+            if cfg.moe_layer(layer):
+                lp["moe"] = moe_init(ks[cfg.n_layers + layer], cfg)
+            else:
+                lp["mlp"] = mlp_init(ks[cfg.n_layers + layer], cfg)
+            period.append(lp)
+        periods.append(period)
+    # stack over periods: each of the `attn_every` slots becomes [P, ...]
+    stacked = [stack_params([periods[p][i] for p in range(n_periods(cfg))])
+               for i in range(cfg.attn_every)]
+    return {
+        "embed": embed_init(ks[-3], cfg),
+        "period": tuple(stacked),
+        "final_norm": rmsnorm_init(cfg.d_model, cfg.dtype),
+        "unembed": unembed_init(ks[-2], cfg),
+    }
+
+
+def _mixer(lp: Params, x, cfg: ModelConfig, batch, offset, *, backend):
+    h = rmsnorm_apply(lp["ln1"], x)
+    if "attn" in lp:
+        lp = {**lp, "attn": fsdp_params(lp["attn"], cfg)}
+        q, k, v = qkv_project(lp["attn"], h, cfg)
+        pos = _positions(batch, q.shape[1], offset)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+        o = attn_mod.attention(q, k, v, causal=True, q_offset=offset,
+                               backend=backend)
+        x = x + out_project(lp["attn"], o)
+    else:
+        x = x + mamba_apply(fsdp_params(lp["mamba"], cfg), h, cfg)
+    h = rmsnorm_apply(lp["ln2"], x)
+    if "moe" in lp:
+        m, aux = moe_apply(lp["moe"], h, cfg)
+    else:
+        m, aux = mlp_apply(fsdp_params(lp["mlp"], cfg), h), jnp.float32(0.0)
+    return x + m, aux
+
+
+def hybrid_apply(params: Params, batch: Dict[str, jnp.ndarray],
+                 cfg: ModelConfig, *, backend: str = "chunked",
+                 remat: bool = True, logits: bool = True
+                 ) -> Dict[str, jnp.ndarray]:
+    x = embed_apply(params["embed"], batch["tokens"])
+
+
+    def one_layer(x, lp):
+        x, a = _mixer(lp, x, cfg, batch, 0, backend=backend)
+        return activation_hint(x), a
+
+    # remat PER LAYER inside the period: checkpointing the whole 8-layer
+    # period kept every layer's chunk-scan internals live (201 GiB/chip
+    # measured on jamba train_4k)
+    layer_f = jax.checkpoint(one_layer, prevent_cse=False)         if remat else one_layer
+
+    def period_fn(carry, slot_params):
+        x, aux = carry
+        for i in range(cfg.attn_every):
+            x, a = layer_f(x, slot_params[i])
+            aux = aux + a
+        return (x, aux), None
+
+    f = period_fn
+    (x, aux), _ = uscan(f, (x, jnp.float32(0.0)), params["period"])
+    x = rmsnorm_apply(params["final_norm"], x)
+    out = {"hidden": x, "aux_loss": aux / cfg.n_layers}
+    if logits:
+        out["logits"] = unembed_apply(params["unembed"], params["embed"],
+                                      x, cfg)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# serve
+# ---------------------------------------------------------------------------
+
+
+def hybrid_init_cache(cfg: ModelConfig, batch_size: int,
+                      max_len: int) -> Params:
+    np_ = n_periods(cfg)
+    kv = (np_, batch_size, max_len, cfg.n_kv, cfg.d_head)
+    mamba_slots = [i for i in range(cfg.attn_every)
+                   if not _is_attn(cfg, i)]
+    return {
+        "k": jnp.zeros(kv, cfg.dtype),
+        "v": jnp.zeros(kv, cfg.dtype),
+        "ssm": {f"slot{i}": {
+            "h": jnp.zeros((np_, batch_size, cfg.d_inner, cfg.ssm_state),
+                           jnp.float32),
+            "conv": jnp.zeros((np_, batch_size, cfg.ssm_conv - 1,
+                               cfg.d_inner), jnp.float32)}
+            for i in mamba_slots},
+        "len": jnp.zeros((batch_size,), jnp.int32),
+    }
+
+
+def hybrid_prefill(params: Params, batch: Dict[str, jnp.ndarray],
+                   cfg: ModelConfig, cache: Params, *,
+                   backend: str = "chunked") -> Tuple[jnp.ndarray, Params]:
+    """Full-prompt forward filling both cache kinds (KV + SSM state)."""
+    from .ssm import _causal_conv, _fused_scan, _ssm_params
+
+    x = embed_apply(params["embed"], batch["tokens"])
+    s = x.shape[1]
+
+    def period_fn(x, scanned):
+        slot_params, kc, vc, ssm = scanned
+        new_ssm = {}
+        for i in range(cfg.attn_every):
+            lp = slot_params[i]
+            h = rmsnorm_apply(lp["ln1"], x)
+            if "attn" in lp:
+                q, k, v = qkv_project(lp["attn"], h, cfg)
+                pos = _positions(batch, q.shape[1], 0)
+                q = apply_rope(q, pos, cfg.rope_theta)
+                k = apply_rope(k, pos, cfg.rope_theta)
+                kw_ = shard_hint(k, ("pod", "data"), None, None, "model")
+                vw_ = shard_hint(v, ("pod", "data"), None, None, "model")
+                kc = jax.lax.dynamic_update_slice_in_dim(
+                    kc, kw_.astype(kc.dtype), 0, 1)
+                vc = jax.lax.dynamic_update_slice_in_dim(
+                    vc, vw_.astype(vc.dtype), 0, 1)
+                o = attn_mod.attention(q, k, v, causal=True, backend=backend)
+                x = x + out_project(lp["attn"], o)
+            else:
+                p = lp["mamba"]
+                xi = h @ p["in_x"]
+                z = h @ p["in_z"]
+                xc = jax.nn.silu(_causal_conv(xi, p["conv_w"], p["conv_b"]))
+                dt, bmat, cmat = _ssm_params(p, xc, cfg)
+                h0 = jnp.zeros((x.shape[0], cfg.d_inner, cfg.ssm_state),
+                               jnp.float32)
+                y, h_last = _fused_scan(dt, bmat, cmat, xc,
+                                        -jnp.exp(p["a_log"]), h0, 128)
+                y = y + xc.astype(jnp.float32) * p["d_skip"]
+                y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+                x = x + y @ p["out"]
+                kconv = p["conv_w"].shape[0]
+                new_ssm[f"slot{i}"] = {
+                    "h": h_last,
+                    "conv": xi[:, s - (kconv - 1):, :].astype(jnp.float32)}
+            h2 = rmsnorm_apply(lp["ln2"], x)
+            if "moe" in lp:
+                m, _ = moe_apply(lp["moe"], h2, cfg)
+            else:
+                m = mlp_apply(lp["mlp"], h2)
+            x = x + m
+        return x, (kc, vc, new_ssm)
+
+    x, (k_new, v_new, ssm_new) = uscan(
+        period_fn, x, (params["period"], cache["k"], cache["v"],
+                       cache["ssm"]))
+    x = rmsnorm_apply(params["final_norm"], x[:, -1:])
+    logits = unembed_apply(params["unembed"], params["embed"], x, cfg)
+    return logits, {"k": k_new, "v": v_new, "ssm": ssm_new,
+                    "len": jnp.full_like(cache["len"], s)}
+
+
+def hybrid_decode_step(params: Params, tokens: jnp.ndarray, cache: Params,
+                       cfg: ModelConfig) -> Tuple[jnp.ndarray, Params]:
+    x = embed_apply(params["embed"], tokens)
+    pos = cache["len"]
+    batch = {"tokens": tokens}
+
+    def period_fn(x, scanned):
+        slot_params, kc, vc, ssm = scanned
+        new_ssm = {}
+        for i in range(cfg.attn_every):
+            lp = slot_params[i]
+            h = rmsnorm_apply(lp["ln1"], x)
+            if "attn" in lp:
+                q, k, v = qkv_project(lp["attn"], h, cfg)
+                ppos = _positions(batch, 1, pos)
+                q = apply_rope(q, ppos, cfg.rope_theta)
+                k = apply_rope(k, ppos, cfg.rope_theta)
+                b = k.shape[0]
+                k = shard_hint(k, ("pod", "data"), None, None, "model")
+                v = shard_hint(v, ("pod", "data"), None, None, "model")
+                idx = jnp.reshape(pos, (b, 1))
+                kc = kc.at[jnp.arange(b)[:, None], idx].set(k.astype(kc.dtype))
+                vc = vc.at[jnp.arange(b)[:, None], idx].set(v.astype(vc.dtype))
+                o = attn_mod.decode_attention(q, kc, vc, pos + 1)
+                x = x + out_project(lp["attn"], o)
+            else:
+                y, ns = mamba_decode_step(lp["mamba"], h, ssm[f"slot{i}"], cfg)
+                new_ssm[f"slot{i}"] = ns
+                x = x + y
+            h = rmsnorm_apply(lp["ln2"], x)
+            if "moe" in lp:
+                m, _ = moe_apply(lp["moe"], h, cfg)
+            else:
+                m = mlp_apply(lp["mlp"], h)
+            x = x + m
+        return x, (kc, vc, new_ssm)
+
+    x, (k_new, v_new, ssm_new) = uscan(
+        period_fn, x, (params["period"], cache["k"], cache["v"],
+                       cache["ssm"]))
+    x = rmsnorm_apply(params["final_norm"], x)
+    logits = unembed_apply(params["unembed"], params["embed"], x, cfg)
+    return logits, {"k": k_new, "v": v_new, "ssm": ssm_new,
+                    "len": cache["len"] + 1}

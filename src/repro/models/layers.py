@@ -1,0 +1,242 @@
+"""Shared neural layers for the model zoo (pure JAX, init/apply style).
+
+Params are nested dicts of jnp arrays; every ``*_init`` returns a pytree and
+every ``*_apply`` is a pure function of (params, inputs).  Layer stacks are
+built as *stacked* pytrees ([L, ...] leading axis) and consumed with
+``jax.lax.scan`` so compile time is O(1) in depth.
+
+Conventions: activations are ``[B, S, D]``; attention heads are packed as
+``[B, S, H, Dh]``; all matmuls accumulate in f32 (``preferred_element_type``)
+regardless of the bf16/f32 param dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One description covering every assigned architecture family."""
+
+    name: str = "model"
+    family: str = "dense"  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 4
+    n_kv: int = 2
+    d_head: int = 32
+    d_ff: int = 256
+    vocab: int = 1024
+    qk_norm: bool = False
+    rope_theta: float = 1e6
+    mrope: bool = False            # Qwen2-VL multimodal RoPE (3 position axes)
+    tie_embeddings: bool = False
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    moe_every: int = 1             # MoE MLP every k-th layer (1 = all layers)
+    capacity_factor: float = 1.25
+    # SSM (Mamba1)
+    ssm_state: int = 16
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    # hybrid (Jamba): attention layer every `attn_every` layers
+    attn_every: int = 0            # 0 = not hybrid
+    # enc-dec (Whisper): encoder config
+    n_enc_layers: int = 0
+    enc_seq: int = 1500            # whisper: 30 s audio -> 1500 frames
+    # frontend stubs
+    frontend: str = "token"        # token | embed (precomputed frame/patch)
+    dtype: Any = jnp.bfloat16
+    # sharding mode: True = FSDP/ZeRO-3 (gather weights at use, cheap for
+    # high tokens/device), False = Megatron-TP (all-reduce activations)
+    fsdp: bool = True
+
+    @property
+    def d_inner(self) -> int:      # mamba inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def is_moe_arch(self) -> bool:
+        return self.n_experts > 0
+
+    def moe_layer(self, layer_idx: int) -> bool:
+        return self.is_moe_arch and (layer_idx % self.moe_every == self.moe_every - 1)
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def rmsnorm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm_apply(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(d_head: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jnp.ndarray, pos: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [B, S, H, Dh]; pos: [B, S] int32."""
+    freqs = rope_freqs(x.shape[-1], theta)                    # [Dh/2]
+    ang = pos[..., None].astype(jnp.float32) * freqs          # [B, S, Dh/2]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, pos3: jnp.ndarray, theta: float,
+                sections: Tuple[int, int, int] = (1, 1, 2)) -> jnp.ndarray:
+    """Qwen2-VL M-RoPE: pos3 [B, S, 3] (t, h, w); frequency channels are
+    partitioned between the three axes in `sections` proportion."""
+    dh = x.shape[-1]
+    half = dh // 2
+    tot = sum(sections)
+    n_t = half * sections[0] // tot
+    n_h = half * sections[1] // tot
+    freqs = rope_freqs(dh, theta)                              # [half]
+    axis_of = jnp.concatenate([
+        jnp.zeros((n_t,), jnp.int32),
+        jnp.ones((n_h,), jnp.int32),
+        jnp.full((half - n_t - n_h,), 2, jnp.int32),
+    ])
+    pos = jnp.take_along_axis(
+        pos3.astype(jnp.float32),
+        jnp.broadcast_to(axis_of[None, None, :], pos3.shape[:2] + (half,)),
+        axis=-1)                                               # [B, S, half]
+    ang = pos * freqs
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention projections
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key, cfg: ModelConfig, cross: bool = False) -> Params:
+    ks = jax.random.split(key, 6)
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.d_head
+    p = {
+        "wq": _dense_init(ks[0], d, h * dh, cfg.dtype),
+        "wk": _dense_init(ks[1], d, kv * dh, cfg.dtype),
+        "wv": _dense_init(ks[2], d, kv * dh, cfg.dtype),
+        "wo": _dense_init(ks[3], h * dh, d, cfg.dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(dh, cfg.dtype)
+        p["k_norm"] = rmsnorm_init(dh, cfg.dtype)
+    return p
+
+
+def qkv_project(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                kv_x: Optional[jnp.ndarray] = None):
+    """Returns q [B,S,H,Dh], k/v [B,Skv,KV,Dh] (pre-RoPE, post-qk-norm)."""
+    b, s, _ = x.shape
+    kv_x = x if kv_x is None else kv_x
+    skv = kv_x.shape[1]
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, cfg.d_head)
+    k = (kv_x @ p["wk"]).reshape(b, skv, cfg.n_kv, cfg.d_head)
+    v = (kv_x @ p["wv"]).reshape(b, skv, cfg.n_kv, cfg.d_head)
+    if cfg.qk_norm:
+        q = rmsnorm_apply(p["q_norm"], q)
+        k = rmsnorm_apply(p["k_norm"], k)
+    return q, k, v
+
+
+def out_project(p: Params, attn: jnp.ndarray) -> jnp.ndarray:
+    b, s, h, dh = attn.shape
+    return attn.reshape(b, s, h * dh) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    ks = jax.random.split(key, 3)
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "wi": _dense_init(ks[0], d, f, cfg.dtype),
+        "wg": _dense_init(ks[1], d, f, cfg.dtype),
+        "wo": _dense_init(ks[2], f, d, cfg.dtype),
+    }
+
+
+def mlp_apply(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    return h @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key, cfg: ModelConfig) -> Params:
+    p = {"tok": (jax.random.normal(key, (cfg.vocab, cfg.d_model), jnp.float32)
+                 * 0.02).astype(cfg.dtype)}
+    return p
+
+
+def embed_apply(p: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def unembed_init(key, cfg: ModelConfig) -> Params:
+    if cfg.tie_embeddings:
+        return {}
+    return {"w": _dense_init(key, cfg.d_model, cfg.vocab, cfg.dtype, scale=0.02)}
+
+
+def unembed_apply(p: Params, embed: Params, x: jnp.ndarray,
+                  cfg: ModelConfig) -> jnp.ndarray:
+    from repro.sharding.rules import shard_hint  # lazy: avoid cycle
+    w = embed["tok"].T if cfg.tie_embeddings else p["w"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w,
+                        preferred_element_type=jnp.float32)
+    # [B,S,V] f32 is the single largest activation: keep it sharded.
+    # FSDP mode: batch over every axis (vocab local); TP mode would put
+    # vocab over 'model' instead.  shard_hint trims axes that don't divide.
+    if getattr(cfg, "fsdp", True):
+        return shard_hint(logits, ("pod", "data", "model"), None, None)
+    return shard_hint(logits, ("pod", "data"), None, "model")
+
+
+def stack_params(per_layer: list) -> Params:
+    """[{...}, {...}] -> {...: [L, ...]} for lax.scan consumption."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_layer)

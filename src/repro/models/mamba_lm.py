@@ -1,0 +1,124 @@
+"""Falcon-Mamba-style attention-free LM: embed + N mamba blocks + head.
+
+Mamba1 layers have no separate MLP — the block IS the layer (as in
+falcon-mamba / mamba1).  Decode state is O(1) per token, so this family
+runs the ``long_500k`` shape.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import (activation_hint, fsdp_params,
+                                  replicate_hint, shard_hint)
+
+from repro.util import scan as uscan
+
+from .layers import (ModelConfig, Params, embed_apply, embed_init,
+                     rmsnorm_apply, rmsnorm_init, stack_params,
+                     unembed_apply, unembed_init)
+from .ssm import mamba_apply, mamba_cache_init, mamba_decode_step, mamba_init
+
+
+def ssm_lm_init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, cfg.n_layers + 3)
+    layers = [{
+        "ln": rmsnorm_init(cfg.d_model, cfg.dtype),
+        "mamba": mamba_init(ks[i], cfg),
+    } for i in range(cfg.n_layers)]
+    return {
+        "embed": embed_init(ks[-3], cfg),
+        "layers": stack_params(layers),
+        "final_norm": rmsnorm_init(cfg.d_model, cfg.dtype),
+        "unembed": unembed_init(ks[-2], cfg),
+    }
+
+
+def ssm_lm_apply(params: Params, batch: Dict[str, jnp.ndarray],
+                 cfg: ModelConfig, *, backend: str = "chunked",
+                 remat: bool = True, logits: bool = True
+                 ) -> Dict[str, jnp.ndarray]:
+    x = embed_apply(params["embed"], batch["tokens"])
+
+
+
+    def one(x, lp):
+        x = x + mamba_apply(fsdp_params(lp["mamba"], cfg),
+                            rmsnorm_apply(lp["ln"], x), cfg)
+        return activation_hint(x), None
+
+    f = jax.checkpoint(one, prevent_cse=False) if remat else one
+    x, _ = uscan(f, x, params["layers"])
+    x = rmsnorm_apply(params["final_norm"], x)
+    out = {"hidden": x, "aux_loss": jnp.float32(0.0)}
+    if logits:
+        out["logits"] = unembed_apply(params["unembed"], params["embed"],
+                                      x, cfg)
+    return out
+
+
+def ssm_lm_init_cache(cfg: ModelConfig, batch_size: int,
+                      max_len: int = 0) -> Params:
+    per = mamba_cache_init(cfg, batch_size)
+    return {
+        "h": jnp.zeros((cfg.n_layers,) + per["h"].shape, jnp.float32),
+        "conv": jnp.zeros((cfg.n_layers,) + per["conv"].shape, jnp.float32),
+        "len": jnp.zeros((batch_size,), jnp.int32),
+    }
+
+
+def ssm_lm_prefill(params: Params, batch: Dict[str, jnp.ndarray],
+                   cfg: ModelConfig, cache: Params, *,
+                   backend: str = "chunked") -> Tuple[jnp.ndarray, Params]:
+    """Run the prompt through scan-over-tokens per layer, keeping final state.
+
+    For SSM, prefill = full forward while retaining (h, conv) at the end of
+    the prompt; we reuse the chunked scan and extract the final state.
+    """
+    from .ssm import _causal_conv, _fused_scan, _ssm_params
+
+    x = embed_apply(params["embed"], batch["tokens"])
+    s = x.shape[1]
+
+    def one(x, lp_cache):
+        lp = lp_cache
+        h_in = rmsnorm_apply(lp["ln"], x)
+        p = lp["mamba"]
+        xi = h_in @ p["in_x"]
+        z = h_in @ p["in_z"]
+        xc = jax.nn.silu(_causal_conv(xi, p["conv_w"], p["conv_b"]))
+        dt, bmat, cmat = _ssm_params(p, xc, cfg)
+        h0 = jnp.zeros((x.shape[0], cfg.d_inner, cfg.ssm_state), jnp.float32)
+        y, h_last = _fused_scan(dt, bmat, cmat, xc,
+                                -jnp.exp(p["a_log"]), h0, 128)
+        y = y + xc.astype(jnp.float32) * p["d_skip"]
+        y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+        x = x + y @ p["out"]
+        k = p["conv_w"].shape[0]
+        conv_state = xi[:, s - (k - 1):, :].astype(jnp.float32)
+        return x, (h_last, conv_state)
+
+    x, (h_new, conv_new) = uscan(one, x, params["layers"])
+    x = rmsnorm_apply(params["final_norm"], x[:, -1:])
+    logits = unembed_apply(params["unembed"], params["embed"], x, cfg)
+    return logits, {"h": h_new, "conv": conv_new,
+                    "len": jnp.full_like(cache["len"], s)}
+
+
+def ssm_lm_decode_step(params: Params, tokens: jnp.ndarray, cache: Params,
+                       cfg: ModelConfig) -> Tuple[jnp.ndarray, Params]:
+    x = embed_apply(params["embed"], tokens)
+
+    def one(x, lp_state):
+        lp, h, conv = lp_state
+        y, ns = mamba_decode_step(lp["mamba"], rmsnorm_apply(lp["ln"], x),
+                                  {"h": h, "conv": conv}, cfg)
+        return x + y, (ns["h"], ns["conv"])
+
+    x, (h_new, conv_new) = uscan(
+        one, x, (params["layers"], cache["h"], cache["conv"]))
+    x = rmsnorm_apply(params["final_norm"], x)
+    logits = unembed_apply(params["unembed"], params["embed"], x, cfg)
+    return logits, {"h": h_new, "conv": conv_new, "len": cache["len"] + 1}

@@ -1,0 +1,160 @@
+"""Expert-parallel MoE via shard_map + explicit all-to-all (hillclimb H1).
+
+The GSPMD-mediated dispatch in ``moe.moe_apply`` builds a GLOBAL-capacity
+[E, C, D] buffer and lets the partitioner move it — measured at 123 s of
+collective time for qwen3-moe × train_4k.  Real EP moves only the tokens:
+
+  per device: route local tokens -> per-destination-shard send buffers
+  -> all_to_all over 'model' -> local expert FFN -> all_to_all back
+  -> combine with gates.
+
+Wire per chip per layer = 2 x t_loc·k·D·bytes (there and back), fwd;
+the transpose of all_to_all is all_to_all, so backward costs the same.
+
+Requirements: ambient mesh with a 'model' axis, E % model_size == 0, and
+the token batch divisible by the full mesh (the train_4k layout).  The
+caller falls back to the dense path otherwise.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .layers import ModelConfig, Params
+
+
+def _mesh_info():
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names:
+            return None
+        return mesh
+    except Exception:
+        return None
+
+
+def ep_applicable(cfg: ModelConfig, x: jnp.ndarray) -> bool:
+    mesh = _mesh_info()
+    if mesh is None or "model" not in mesh.axis_names:
+        return False
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    m = sizes["model"]
+    full = 1
+    for s in mesh.axis_sizes:
+        full *= s
+    return (cfg.n_experts % m == 0 and m > 1
+            and x.shape[0] % full == 0 and x.shape[0] >= full)
+
+
+def _rank_by(dest: jnp.ndarray, n_bins: int, cap: int):
+    """Sort-based rank of each element within its destination bin."""
+    n = dest.shape[0]
+    counts = jnp.zeros((n_bins,), jnp.int32).at[dest].add(1)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(counts)[:-1]])
+    order = jnp.argsort(dest, stable=True)
+    rank_sorted = jnp.arange(n, dtype=jnp.int32) - offsets[dest[order]]
+    rank = jnp.zeros((n,), jnp.int32).at[order].set(rank_sorted)
+    keep = rank < cap
+    slot = dest * cap + jnp.where(keep, rank, 0)
+    return slot, keep
+
+
+def moe_apply_ep(p: Params, x: jnp.ndarray, cfg: ModelConfig
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B,S,D] (batch divides the whole mesh) -> (out, aux)."""
+    mesh = _mesh_info()
+    axes = tuple(mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    m = sizes["model"]
+    e, k, d = cfg.n_experts, cfg.top_k, cfg.d_model
+    e_loc = e // m
+    b, s, _ = x.shape
+
+    x_spec = P(axes, None, None)
+    w_spec = P("model", None, None)
+    r_spec = P(None, None)
+
+    def inner(xs, router, wi, wg, wo):
+        # xs: [b_loc, S, D]; wi/wg/wo: [E_loc, ...]; router: [D, E]
+        t_loc = xs.shape[0] * xs.shape[1]
+        xt = xs.reshape(t_loc, d)
+        logits = xt.astype(jnp.float32) @ router              # [t, E]
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate, expert = jax.lax.top_k(probs, k)                # [t, k]
+        gate = gate / jnp.maximum(
+            jnp.sum(gate, axis=-1, keepdims=True), 1e-9)
+        me = jnp.mean(probs, axis=0)
+        ce = jnp.zeros((e,), jnp.float32).at[expert.reshape(-1)].add(
+            1.0) / (t_loc * k)
+        aux = e * jnp.sum(me * ce)
+        aux = jax.lax.pmean(aux, axes)
+
+        flat_e = expert.reshape(-1)                           # [t*k]
+        dest = flat_e // e_loc                                # model shard
+        cap_send = max(8, -(-int(t_loc * k * cfg.capacity_factor / m)
+                            // 8) * 8)
+        slot, keep = _rank_by(dest, m, cap_send)
+        tok_idx = jnp.repeat(jnp.arange(t_loc), k)
+        dump = m * cap_send                    # +1 overflow slot
+        slot_s = jnp.where(keep, slot, dump)
+
+        send = jnp.zeros((m * cap_send + 1, d), xs.dtype)
+        send = send.at[slot_s].add(jnp.where(keep[:, None], xt[tok_idx], 0))
+        send_le = jnp.zeros((m * cap_send + 1,), jnp.int32).at[slot_s].max(
+            jnp.where(keep, flat_e % e_loc, 0))
+        send = send[:dump].reshape(m, cap_send, d)
+        send_le = send_le[:dump].reshape(m, cap_send)
+
+        # dispatch all-to-all over the expert axis
+        recv = jax.lax.all_to_all(send, "model", split_axis=0,
+                                  concat_axis=0, tiled=True)
+        recv_le = jax.lax.all_to_all(send_le[..., None], "model",
+                                     split_axis=0, concat_axis=0,
+                                     tiled=True)[..., 0]
+        rt = recv.reshape(m * cap_send, d)                    # local tokens
+        rle = recv_le.reshape(m * cap_send)
+
+        # second-stage bucket by local expert
+        cap2 = max(8, -(-int(m * cap_send * 1.0 / e_loc) // 8) * 8) * 2
+        slot2, keep2 = _rank_by(rle, e_loc, cap2)
+        dump2 = e_loc * cap2
+        slot2_s = jnp.where(keep2, slot2, dump2)
+        buf = jnp.zeros((e_loc * cap2 + 1, d), xs.dtype)
+        buf = buf.at[slot2_s].add(jnp.where(keep2[:, None], rt, 0))
+        buf = buf[:dump2].reshape(e_loc, cap2, d)
+
+        hg = jnp.einsum("ecd,edf->ecf", buf, wg,
+                        preferred_element_type=jnp.float32)
+        hi = jnp.einsum("ecd,edf->ecf", buf, wi,
+                        preferred_element_type=jnp.float32)
+        hh = (jax.nn.silu(hg) * hi).astype(xs.dtype)
+        yb = jnp.einsum("ecf,efd->ecd", hh, wo,
+                        preferred_element_type=jnp.float32
+                        ).astype(xs.dtype)
+
+        # un-bucket, return all-to-all, combine
+        y_rt = yb.reshape(e_loc * cap2, d)[jnp.minimum(slot2, dump2 - 1)]
+        y_rt = jnp.where(keep2[:, None], y_rt, 0)             # [m*cs, D]
+        y_send = y_rt.reshape(m, cap_send, d)
+        y_back = jax.lax.all_to_all(y_send, "model", split_axis=0,
+                                    concat_axis=0, tiled=True)
+        y_flat = jnp.where(
+            keep[:, None],
+            y_back.reshape(m * cap_send, d)[jnp.minimum(slot, dump - 1)],
+            0)                                                # [t*k, D]
+        w = jnp.where(keep, gate.reshape(-1), 0.0)[:, None]
+        out = jnp.zeros((t_loc, d), jnp.float32).at[tok_idx].add(
+            y_flat.astype(jnp.float32) * w)
+        return out.reshape(xs.shape).astype(xs.dtype), aux
+
+    out, aux = jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(x_spec, r_spec, w_spec, w_spec, w_spec),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )(x, p["router"], p["wi"], p["wg"], p["wo"])
+    return out, aux

@@ -1,0 +1,112 @@
+"""Model registry: family -> (init, apply, cache, prefill, decode) API.
+
+``get_model(cfg)`` returns a ``ModelApi`` whose members close over the
+config; ``input_specs(cfg, shape)`` builds the ShapeDtypeStruct stand-ins
+used by smoke tests (with real arrays) and the multi-pod dry-run (with
+abstract shapes, no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, hybrid, mamba_lm, transformer
+from .layers import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    apply: Callable[..., Dict[str, jnp.ndarray]]
+    init_cache: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode_step: Callable[..., Any]
+
+
+_FAMILY_MODULES = {
+    "dense": transformer, "moe": transformer, "vlm": transformer,
+    "ssm": mamba_lm, "hybrid": hybrid, "audio": encdec,
+}
+_FNS = {
+    transformer: ("lm_init", "lm_apply", "lm_init_cache", "lm_prefill",
+                  "lm_decode_step"),
+    mamba_lm: ("ssm_lm_init", "ssm_lm_apply", "ssm_lm_init_cache",
+               "ssm_lm_prefill", "ssm_lm_decode_step"),
+    hybrid: ("hybrid_init", "hybrid_apply", "hybrid_init_cache",
+             "hybrid_prefill", "hybrid_decode_step"),
+    encdec: ("encdec_init", "encdec_apply", "encdec_init_cache",
+             "encdec_prefill", "encdec_decode_step"),
+}
+
+
+def get_model(cfg: ModelConfig) -> ModelApi:
+    mod = _FAMILY_MODULES.get(cfg.family)
+    if mod is None:
+        raise ValueError(f"unknown family {cfg.family!r}")
+    f_init, f_apply, f_cache, f_prefill, f_decode = \
+        (getattr(mod, n) for n in _FNS[mod])
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key: f_init(key, cfg),
+        apply=lambda params, batch, **kw: f_apply(params, batch, cfg, **kw),
+        init_cache=lambda batch, max_len=0: f_cache(cfg, batch, max_len),
+        prefill=lambda params, batch, cache, **kw:
+            f_prefill(params, batch, cfg, cache, **kw),
+        decode_step=lambda params, tokens, cache, **kw:
+            f_decode(params, tokens, cache, cfg, **kw),
+    )
+
+
+# ---------------------------------------------------------------------------
+# input specs per (config, shape)
+# ---------------------------------------------------------------------------
+
+I32 = jnp.int32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_input_specs(cfg: ModelConfig, batch: int, seq: int
+                      ) -> Dict[str, jax.ShapeDtypeStruct]:
+    if cfg.family == "vlm" or cfg.frontend == "embed" and cfg.family != "audio":
+        return {
+            "embeds": _sds((batch, seq, cfg.d_model), cfg.dtype),
+            "pos3": _sds((batch, seq, 3), I32),
+            "labels": _sds((batch, seq), I32),
+        }
+    if cfg.family == "audio":
+        return {
+            "enc_embeds": _sds((batch, cfg.enc_seq, cfg.d_model), cfg.dtype),
+            "tokens": _sds((batch, seq), I32),
+            "labels": _sds((batch, seq), I32),
+        }
+    return {
+        "tokens": _sds((batch, seq), I32),
+        "labels": _sds((batch, seq), I32),
+    }
+
+
+def prefill_input_specs(cfg: ModelConfig, batch: int, seq: int):
+    specs = train_input_specs(cfg, batch, seq)
+    specs.pop("labels")
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    """ShapeDtypeStructs of the decode cache (no allocation)."""
+    api = get_model(cfg)
+    return jax.eval_shape(lambda: api.init_cache(batch, max_len))
+
+
+def decode_input_specs(cfg: ModelConfig, batch: int):
+    if cfg.family == "vlm":
+        return {"embeds": _sds((batch, 1, cfg.d_model), cfg.dtype),
+                "pos3": _sds((batch, 1, 3), I32)}
+    return {"tokens": _sds((batch, 1), I32)}

@@ -1,0 +1,196 @@
+"""Mamba1 selective-state-space block (falcon-mamba / jamba mamba layers).
+
+Training path: chunked parallel scan — sequence is split into chunks;
+within a chunk the recurrence h_t = a_t*h_{t-1} + b_t is solved with
+``jax.lax.associative_scan`` (vectorized, MXU-friendly); chunks are chained
+with a small sequential ``lax.scan``.  Memory is O(B·Q·D_in·N) for chunk Q
+instead of O(B·S·D_in·N).  The Pallas kernel in
+``repro.kernels.selective_scan`` implements the same chunking on-TPU.
+
+Decode path: O(1) per token — the SSM state [B, D_in, N] plus a conv ring
+buffer IS the "KV cache" (why this family runs long_500k).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ModelConfig, Params, _dense_init
+
+
+def dt_rank(cfg: ModelConfig) -> int:
+    return max(1, -(-cfg.d_model // 16))
+
+
+def mamba_init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 8)
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    r = dt_rank(cfg)
+    # S4D-real initialization for A
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    dt_bias = jnp.log(jnp.exp(
+        jnp.exp(jax.random.uniform(ks[6], (di,), jnp.float32,
+                                   jnp.log(1e-3), jnp.log(1e-1)))) - 1.0 + 1e-9)
+    return {
+        "in_x": _dense_init(ks[0], d, di, cfg.dtype),
+        "in_z": _dense_init(ks[1], d, di, cfg.dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.ssm_conv, di), jnp.float32)
+                   * 0.1).astype(cfg.dtype),
+        "conv_b": jnp.zeros((di,), cfg.dtype),
+        "x_proj": _dense_init(ks[3], di, r + 2 * n, cfg.dtype),
+        "dt_proj": _dense_init(ks[4], r, di, jnp.float32,
+                               scale=r ** -0.5),
+        "dt_bias": dt_bias,
+        "a_log": jnp.log(a),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out": _dense_init(ks[5], di, d, cfg.dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 init_state: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Depthwise causal conv along S. x: [B,S,Di]; w: [K,Di]."""
+    k = w.shape[0]
+    if init_state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([init_state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    return out + b[None, None, :]
+
+
+def _ssm_params(p: Params, x: jnp.ndarray, cfg: ModelConfig):
+    """x: [B,S,Di] (post-conv, post-silu) -> dt, B, C tensors."""
+    n, r = cfg.ssm_state, dt_rank(cfg)
+    proj = x @ p["x_proj"]                                      # [B,S,r+2n]
+    dt_in, bc = proj[..., :r], proj[..., r:]
+    bmat, cmat = bc[..., :n], bc[..., n:]                       # [B,S,N]
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32) @ p["dt_proj"]
+                         + p["dt_bias"])                        # [B,S,Di]
+    return dt, bmat.astype(jnp.float32), cmat.astype(jnp.float32)
+
+
+def _scan_chunked(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray,
+                  chunk: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Solve h_t = a_t h_{t-1} + b_t.  a,b: [B,S,Di,N]; h0: [B,Di,N].
+
+    Returns (h [B,S,Di,N], h_last).  Chunked: sequential over S/chunk,
+    parallel (associative_scan) within a chunk.
+    """
+    bsz, s, di, n = a.shape
+    nchunk = -(-s // chunk)
+    pad = nchunk * chunk - s
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    a = a.reshape(bsz, nchunk, chunk, di, n).transpose(1, 0, 2, 3, 4)
+    b = b.reshape(bsz, nchunk, chunk, di, n).transpose(1, 0, 2, 3, 4)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    def chunk_body(h, ab):
+        ac, bc = ab                                              # [B,Q,Di,N]
+        a_cum, b_cum = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        h_chunk = a_cum * h[:, None] + b_cum                     # [B,Q,Di,N]
+        return h_chunk[:, -1], h_chunk
+
+    from repro.util import scan as _scan
+    h_last, h = _scan(chunk_body, h0, (a, b))
+    h = h.transpose(1, 0, 2, 3, 4).reshape(bsz, nchunk * chunk, di, n)
+    return h[:, :s], h_last
+
+
+def _fused_scan(dt, bmat, cmat, xc, a_neg, h0, chunk: int):
+    """Chunked scan with IN-BODY discretization and output projection.
+
+    Never materializes [B,S,Di,N] — only per-chunk [B,Q,Di,N] tensors —
+    matching the Pallas kernel's VMEM-resident formulation.  Returns
+    (y [B,S,Di] f32, h_last [B,Di,N])."""
+    bsz, s, di = dt.shape
+    n = bmat.shape[-1]
+    nchunk = -(-s // chunk)
+    pad = nchunk * chunk - s
+
+    def pad3(v):
+        return jnp.pad(v, ((0, 0), (0, pad), (0, 0))) if pad else v
+
+    def chunks(v):
+        return pad3(v).reshape(bsz, nchunk, chunk, v.shape[-1]) \
+            .transpose(1, 0, 2, 3)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    def body(h, inp):
+        dt_c, b_c, c_c, xc_c = inp                # [B,Q,Di],[B,Q,N],...
+        a_t = jnp.exp(dt_c[..., None] * a_neg[None, None])
+        b_t = (dt_c * xc_c)[..., None] * b_c[:, :, None, :]
+        a_cum, b_cum = jax.lax.associative_scan(combine, (a_t, b_t), axis=1)
+        h_chunk = a_cum * h[:, None] + b_cum       # [B,Q,Di,N]
+        y_c = jnp.einsum("bqdn,bqn->bqd", h_chunk, c_c)
+        return h_chunk[:, -1], y_c
+
+    from repro.util import scan as _scan
+    h_last, y = _scan(body, h0,
+                      (chunks(dt), chunks(bmat), chunks(cmat),
+                       chunks(xc.astype(jnp.float32))))
+    y = y.transpose(1, 0, 2, 3).reshape(bsz, nchunk * chunk, di)
+    return y[:, :s], h_last
+
+
+def mamba_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                chunk: int = 128) -> jnp.ndarray:
+    """Full-sequence forward. x: [B,S,D] -> [B,S,D]."""
+    xi = x @ p["in_x"]                                           # [B,S,Di]
+    z = x @ p["in_z"]
+    xc = jax.nn.silu(_causal_conv(xi, p["conv_w"], p["conv_b"]))
+    dt, bmat, cmat = _ssm_params(p, xc, cfg)
+    h0 = jnp.zeros((x.shape[0], cfg.d_inner, cfg.ssm_state), jnp.float32)
+    a_neg = -jnp.exp(p["a_log"])
+    y, _ = _fused_scan(dt, bmat, cmat, xc, a_neg, h0, chunk)
+    y = y + xc.astype(jnp.float32) * p["d_skip"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return y @ p["out"]
+
+
+# ---------------------------------------------------------------------------
+# decode (stateful, O(1)/token)
+# ---------------------------------------------------------------------------
+
+
+def mamba_cache_init(cfg: ModelConfig, batch: int) -> Params:
+    return {
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner),
+                          jnp.float32),
+    }
+
+
+def mamba_decode_step(p: Params, x: jnp.ndarray, cache: Params,
+                      cfg: ModelConfig) -> Tuple[jnp.ndarray, Params]:
+    """x: [B,1,D]; cache: {'h','conv'} -> (y [B,1,D], new cache)."""
+    xi = x @ p["in_x"]                                           # [B,1,Di]
+    z = x @ p["in_z"]
+    conv_in = jnp.concatenate([cache["conv"].astype(xi.dtype), xi], axis=1)
+    k = p["conv_w"].shape[0]
+    xc = sum(conv_in[:, i:i + 1, :] * p["conv_w"][i][None, None, :]
+             for i in range(k)) + p["conv_b"][None, None, :]
+    xc = jax.nn.silu(xc)                                         # [B,1,Di]
+    dt, bmat, cmat = _ssm_params(p, xc, cfg)
+    a_t = jnp.exp(dt[..., None] * (-jnp.exp(p["a_log"]))[None, None])
+    b_t = (dt * xc.astype(jnp.float32))[..., None] * bmat[:, :, None, :]
+    h = a_t[:, 0] * cache["h"] + b_t[:, 0]                       # [B,Di,N]
+    y = jnp.einsum("bdn,bn->bd", h, cmat[:, 0])[:, None, :]
+    y = y + xc.astype(jnp.float32) * p["d_skip"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    new_cache = {"h": h, "conv": conv_in[:, 1:].astype(jnp.float32)}
+    return y @ p["out"], new_cache

@@ -1,0 +1,242 @@
+"""Decoder-only transformer LM (covers dense, moe and vlm families).
+
+Layers are stacked pytrees consumed by ``lax.scan`` (O(1) compile time in
+depth) with optional per-layer ``jax.checkpoint`` (remat).  Three entry
+points per the serving split:
+
+  * ``lm_apply``      — full-sequence training forward -> logits
+  * ``lm_prefill``    — forward that also fills a KV cache
+  * ``lm_decode_step``— one-token step against the cache
+
+Input is either ``tokens`` [B,S] (LM) or ``embeds`` [B,S,D] (+ ``pos3``
+[B,S,3] for M-RoPE) for the VLM/audio stub frontends.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import (activation_hint, fsdp_params,
+                                  replicate_hint, shard_hint)
+
+from repro.util import scan as uscan
+
+from . import attention as attn_mod
+from .layers import (ModelConfig, Params, apply_mrope, apply_rope, attn_init,
+                     embed_apply, embed_init, mlp_apply, mlp_init,
+                     out_project, qkv_project, rmsnorm_apply, rmsnorm_init,
+                     stack_params, unembed_apply, unembed_init)
+from .moe import moe_apply, moe_init
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def layer_init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": rmsnorm_init(cfg.d_model, cfg.dtype),
+        "attn": attn_init(ks[0], cfg),
+        "ln2": rmsnorm_init(cfg.d_model, cfg.dtype),
+    }
+    if cfg.family == "moe" or (cfg.is_moe_arch and cfg.moe_every == 1):
+        p["moe"] = moe_init(ks[1], cfg)
+    else:
+        p["mlp"] = mlp_init(ks[1], cfg)
+    return p
+
+
+def lm_init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, cfg.n_layers + 3)
+    layers = [layer_init(ks[i], cfg) for i in range(cfg.n_layers)]
+    return {
+        "embed": embed_init(ks[-3], cfg),
+        "layers": stack_params(layers),
+        "final_norm": rmsnorm_init(cfg.d_model, cfg.dtype),
+        "unembed": unembed_init(ks[-2], cfg),
+    }
+
+
+# ---------------------------------------------------------------------------
+# one layer
+# ---------------------------------------------------------------------------
+
+
+def _positions(batch: Dict[str, jnp.ndarray], s: int, offset) -> jnp.ndarray:
+    b = (batch.get("tokens") if "tokens" in batch else batch["embeds"]).shape[0]
+    return jnp.arange(s)[None, :] + jnp.reshape(jnp.asarray(offset), (-1, 1))
+
+
+def _rope(cfg: ModelConfig, q, k, batch, offset):
+    if cfg.mrope and "pos3" in batch:
+        q = apply_mrope(q, batch["pos3"], cfg.rope_theta)
+        k = apply_mrope(k, batch["pos3"], cfg.rope_theta)
+    else:
+        pos = _positions(batch, q.shape[1], offset)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    return q, k
+
+
+def layer_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                batch: Dict[str, jnp.ndarray], *, backend: str = "chunked",
+                causal: bool = True, offset=0
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (x_out, aux_loss)."""
+    attn_p = fsdp_params(p["attn"], cfg)
+    h = rmsnorm_apply(p["ln1"], x)
+    q, k, v = qkv_project(attn_p, h, cfg)
+    q, k = _rope(cfg, q, k, batch, offset)
+    o = attn_mod.attention(q, k, v, causal=causal, q_offset=offset,
+                           backend=backend)
+    x = x + out_project(attn_p, o)
+    h = rmsnorm_apply(p["ln2"], x)
+    if "moe" in p:
+        m, aux = moe_apply(p["moe"], h, cfg)   # experts stay EP-sharded
+    else:
+        m, aux = mlp_apply(fsdp_params(p["mlp"], cfg), h), jnp.float32(0.0)
+    return x + m, aux
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train)
+# ---------------------------------------------------------------------------
+
+
+def lm_apply(params: Params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+             *, backend: str = "chunked", remat: bool = True,
+             logits: bool = True) -> Dict[str, jnp.ndarray]:
+    x = (embed_apply(params["embed"], batch["tokens"])
+         if "tokens" in batch else batch["embeds"].astype(cfg.dtype))
+
+
+    def one(carry, lp):
+        x, aux = carry
+        x, a = layer_apply(lp, x, cfg, batch, backend=backend)
+        # FSDP: activations stay batch-sharded; GSPMD then all-gathers the
+        # (model-sharded) weights per layer instead of all-reducing
+        # activation partial sums (TP) — see DESIGN.md perf notes.
+        x = activation_hint(x)
+        return (x, aux + a), None
+
+    f = jax.checkpoint(one, prevent_cse=False) if remat else one
+    (x, aux), _ = uscan(f, (x, jnp.float32(0.0)), params["layers"])
+    x = rmsnorm_apply(params["final_norm"], x)
+    out = {"hidden": x, "aux_loss": aux / cfg.n_layers}
+    if logits:
+        out["logits"] = unembed_apply(params["unembed"], params["embed"],
+                                      x, cfg)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# serve: KV cache prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def lm_init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
+                  dtype=None) -> Params:
+    dtype = dtype or cfg.dtype
+    shape = (cfg.n_layers, batch_size, max_len, cfg.n_kv, cfg.d_head)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "len": jnp.zeros((batch_size,), jnp.int32),
+    }
+
+
+def _cached_layer(p, kv_cache_layer, x, cfg, batch, offset, cache_len,
+                  *, backend):
+    """One layer for prefill (writes cache) or decode (reads+writes)."""
+    kc, vc = kv_cache_layer
+    attn_p = fsdp_params(p["attn"], cfg)
+    h = rmsnorm_apply(p["ln1"], x)
+    q, k, v = qkv_project(attn_p, h, cfg)
+    q, k = _rope(cfg, q, k, batch, offset)
+    s = x.shape[1]
+    # write k/v in the CACHE's layout (batch over data, Dh over 'model'):
+    # resharding the [B,S,KV,Dh] update is MBs; letting GSPMD reshard the
+    # [L,B,Smax,KV,Dh] cache instead is GBs per layer.
+    kw_ = shard_hint(k, ("pod", "data"), None, None, "model")
+    vw_ = shard_hint(v, ("pod", "data"), None, None, "model")
+    kc = jax.lax.dynamic_update_slice_in_dim(kc, kw_.astype(kc.dtype),
+                                             offset, axis=1) \
+        if isinstance(offset, int) else _scatter_kv(kc, kw_, offset)
+    vc = jax.lax.dynamic_update_slice_in_dim(vc, vw_.astype(vc.dtype),
+                                             offset, axis=1) \
+        if isinstance(offset, int) else _scatter_kv(vc, vw_, offset)
+    if s == 1:
+        o = attn_mod.decode_attention(q, kc, vc, cache_len)
+    else:
+        o = attn_mod.attention(q, k, v, causal=True, q_offset=offset,
+                               backend=backend)
+    x = x + out_project(attn_p, o)
+    h = rmsnorm_apply(p["ln2"], x)
+    if "moe" in p:
+        m, _ = moe_apply(p["moe"], h, cfg)
+    else:
+        m = mlp_apply(fsdp_params(p["mlp"], cfg), h)
+    return x + m, (kc, vc)
+
+
+def _scatter_kv(cache, new, pos):
+    """Per-batch-row scatter at positions `pos` [B] (ragged decode)."""
+    b = new.shape[0]
+    idx = jnp.reshape(pos, (b, 1))
+    return cache.at[jnp.arange(b)[:, None], idx].set(
+        new.astype(cache.dtype))
+
+
+def lm_prefill(params: Params, batch: Dict[str, jnp.ndarray],
+               cfg: ModelConfig, cache: Params, *,
+               backend: str = "chunked") -> Tuple[jnp.ndarray, Params]:
+    """Full-prompt forward; fills cache[: , :S]; returns last-pos logits."""
+    x = (embed_apply(params["embed"], batch["tokens"])
+         if "tokens" in batch else batch["embeds"].astype(cfg.dtype))
+    s = x.shape[1]
+
+
+    def one(x, lp_kv):
+        lp, kc, vc = lp_kv
+        x, (kc, vc) = _cached_layer(lp, (kc, vc), x, cfg, batch, 0,
+                                    None, backend=backend)
+        return activation_hint(x), (kc, vc)
+
+    x, (k_new, v_new) = uscan(
+        one, x, (params["layers"], cache["k"], cache["v"]))
+    x = rmsnorm_apply(params["final_norm"], x[:, -1:])
+    logits = unembed_apply(params["unembed"], params["embed"], x, cfg)
+    new_cache = {"k": k_new, "v": v_new,
+                 "len": jnp.full_like(cache["len"], s)}
+    return logits, new_cache
+
+
+def lm_decode_step(params: Params, tokens: jnp.ndarray, cache: Params,
+                   cfg: ModelConfig,
+                   batch_extra: Optional[Dict[str, jnp.ndarray]] = None
+                   ) -> Tuple[jnp.ndarray, Params]:
+    """tokens [B,1] (or embeds [B,1,D] under key 'embeds' in batch_extra)."""
+    batch = dict(batch_extra or {})
+    if tokens is not None:
+        batch["tokens"] = tokens
+    x = (embed_apply(params["embed"], batch["tokens"])
+         if "tokens" in batch else batch["embeds"].astype(cfg.dtype))
+    pos = cache["len"]                                           # [B]
+
+    # decode positions: RoPE offset = current length (per row)
+    def one_fixed(x, lp_kv):
+        lp, kc, vc = lp_kv
+        x, (kc, vc) = _cached_layer(lp, (kc, vc), x, cfg, batch,
+                                    pos, pos + 1, backend="naive")
+        return x, (kc, vc)
+
+    x, (k_new, v_new) = uscan(
+        one_fixed, x, (params["layers"], cache["k"], cache["v"]))
+    x = rmsnorm_apply(params["final_norm"], x)
+    logits = unembed_apply(params["unembed"], params["embed"], x, cfg)
+    return logits, {"k": k_new, "v": v_new, "len": cache["len"] + 1}

@@ -1,0 +1,135 @@
+"""The "SDN controller for the pod": the paper's DES applied to TPU
+collective scheduling (DESIGN.md §3).
+
+The pod ICI fabric is a 2-D torus; candidate collective schedules are
+rendered as round-structured flow sets (core.flows) and ranked by
+simulated completion time under the paper's fair-share channel model —
+exactly the SDN controller's what-if role, with the pod as the data
+center.  Analytic ring formulas are provided for large meshes (the DES
+cross-validates them on small tori in tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import PolicyConfig, simulate
+from repro.core.flows import Flow, flows_setup
+from repro.core.topology import Topology, torus_2d
+from .hw import HwSpec, V5E
+
+GBIT = 1e9
+
+
+# ---------------------------------------------------------------------------
+# schedule renderers: bytes -> rounds of neighbor flows on a torus
+# ---------------------------------------------------------------------------
+
+
+def ring_allreduce_flows(n: int, gbits: float, *, ring: Sequence[int],
+                         bidirectional: bool = False) -> List[Flow]:
+    """Ring all-reduce of `gbits` per chip over `ring` (node-id order).
+
+    2(n-1) rounds of gbits/n neighbor transfers; bidirectional splits the
+    payload across both ring directions (halving rounds' volume)."""
+    flows: List[Flow] = []
+    chunk = gbits / n
+    dirs = ((1, chunk / 2), (-1, chunk / 2)) if bidirectional \
+        else ((1, chunk),)
+    for r in range(2 * (n - 1)):
+        for i in range(n):
+            for d, c in dirs:
+                flows.append(Flow(ring[i], ring[(i + d) % n], c, round=r))
+    return flows
+
+
+def torus_2d_allreduce_flows(nx: int, ny: int, gbits: float
+                             ) -> List[Flow]:
+    """Dimension-ordered: reduce-scatter+all-gather over x rings, then y.
+
+    Phase 1 (x): each of the ny x-rings moves gbits/ny... actually each
+    x-ring all-reduces the full payload, then y-rings all-reduce the
+    x-reduced shards: standard 2D algorithm moves gbits*(nx-1)/nx over x
+    links and gbits*(ny-1)/(nx*ny) over y links per chip."""
+    flows: List[Flow] = []
+    idx = lambda x, y: x * ny + y
+    rbase = 0
+    # x-phase: all-reduce along each x ring (payload gbits)
+    for r in range(2 * (nx - 1)):
+        for y in range(ny):
+            for x in range(nx):
+                flows.append(Flow(idx(x, y), idx((x + 1) % nx, y),
+                                  gbits / nx, round=rbase + r))
+    rbase += 2 * (nx - 1)
+    # y-phase: all-reduce along each y ring (payload gbits/nx)
+    for r in range(2 * (ny - 1)):
+        for x in range(nx):
+            for y in range(ny):
+                flows.append(Flow(idx(x, y), idx(x, (y + 1) % ny),
+                                  gbits / (nx * ny), round=rbase + r))
+    return flows
+
+
+# ---------------------------------------------------------------------------
+# predictions
+# ---------------------------------------------------------------------------
+
+
+def analytic_time(schedule: str, n_chips: int, bytes_per_chip: float,
+                  hw: HwSpec = V5E, mesh_shape: Tuple[int, int] = None
+                  ) -> float:
+    b = bytes_per_chip
+    if schedule == "ring":
+        return 2 * (n_chips - 1) / n_chips * b / hw.ici_link_bw
+    if schedule == "ring-bidir":
+        return (n_chips - 1) / n_chips * b / hw.ici_link_bw
+    if schedule == "torus2d":
+        nx, ny = mesh_shape
+        tx = 2 * (nx - 1) / nx * b / hw.ici_link_bw
+        ty = 2 * (ny - 1) / (nx * ny) * b / hw.ici_link_bw
+        return tx + ty
+    raise ValueError(schedule)
+
+
+def simulate_schedule(flows: List[Flow], topo: Topology, *,
+                      link_gbps: float) -> float:
+    """DES completion time (seconds) of a rendered schedule."""
+    setup = flows_setup(topo, flows)
+    state = simulate(setup, PolicyConfig())
+    return float(state.time)
+
+
+@dataclasses.dataclass
+class Advice:
+    schedule: str
+    predicted_s: float
+    source: str   # "des" | "analytic"
+
+
+def advise_allreduce(bytes_per_chip: float, mesh_shape: Tuple[int, int],
+                     hw: HwSpec = V5E, *, des_max_chips: int = 64
+                     ) -> List[Advice]:
+    """Rank candidate all-reduce schedules for one pod."""
+    nx, ny = mesh_shape
+    n = nx * ny
+    gbits = bytes_per_chip * 8 / GBIT
+    out: List[Advice] = []
+    if n <= des_max_chips:
+        topo = torus_2d(nx, ny, bw=hw.ici_link_bw * 8)
+        ring = [x * ny + (y if x % 2 == 0 else ny - 1 - y)
+                for x in range(nx) for y in range(ny)]  # boustrophedon
+        for name, fl in [
+            ("ring", ring_allreduce_flows(n, gbits, ring=ring)),
+            ("ring-bidir", ring_allreduce_flows(n, gbits, ring=ring,
+                                                bidirectional=True)),
+            ("torus2d", torus_2d_allreduce_flows(nx, ny, gbits)),
+        ]:
+            out.append(Advice(name, simulate_schedule(
+                fl, topo, link_gbps=hw.ici_link_bw * 8 / GBIT), "des"))
+    else:
+        for name in ("ring", "ring-bidir", "torus2d"):
+            out.append(Advice(name, analytic_time(
+                name, n, bytes_per_chip, hw, mesh_shape), "analytic"))
+    return sorted(out, key=lambda a: a.predicted_s)

@@ -1,0 +1,123 @@
+"""HLO-text analysis: collective-op inventory and wire-byte accounting.
+
+``cost_analysis()`` has no collective numbers, so we parse the
+post-partitioning HLO (``compiled.as_text()``): every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+op contributes its ring-algorithm wire bytes per participating chip:
+
+  all-reduce      2·S·(n-1)/n     (reduce-scatter + all-gather)
+  all-gather        S·(n-1)/n     (S = full output size)
+  reduce-scatter    S·(n-1)/n     (S = full input size)
+  all-to-all        S·(n-1)/n
+  collective-permute  S           (point-to-point)
+
+The compiled module is the per-device SPMD program, so shapes are already
+per-device; group size n comes from replica_groups (v1 list or v2 iota
+form).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_GROUPS_V1_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_SRCDST_RE = re.compile(r"source_target_pairs=")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_V2_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_V1_RE.search(line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip()]
+        return max(1, len(ids))
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    bytes_moved: Dict[str, float]    # output-size bytes per op kind
+    wire_bytes: float                # ring-algorithm wire bytes per chip
+    ops: List[dict]
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.counts.values())
+
+
+def collective_stats(hlo_text: str, *, num_partitions: int = 1
+                     ) -> CollectiveStats:
+    counts: Dict[str, int] = {}
+    moved: Dict[str, float] = {}
+    wire = 0.0
+    ops: List[dict] = []
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_txt, kind, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":
+            continue  # counted at -start
+        size = _shape_bytes(shape_txt)
+        n = _group_size(line, num_partitions)
+        frac = (n - 1) / n if n > 1 else 0.0
+        if kind == "all-reduce":
+            w = 2.0 * size * frac
+        elif kind == "collective-permute":
+            w = float(size)
+        elif kind == "reduce-scatter":
+            # HLO reports the (scattered) OUTPUT shape; input = out * n
+            w = size * n * frac
+        else:  # all-gather / all-to-all: output size counts
+            w = size * frac
+        counts[kind] = counts.get(kind, 0) + 1
+        moved[kind] = moved.get(kind, 0.0) + size
+        wire += w
+        ops.append({"kind": kind, "bytes": size, "group": n,
+                    "wire_bytes": w})
+    return CollectiveStats(counts=counts, bytes_moved=moved,
+                           wire_bytes=wire, ops=ops)
+
+
+def duplicate_fusion_count(hlo_text: str) -> Dict[str, int]:
+    """Rough remat indicator: repeated identical fusion shapes."""
+    sig: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        if " fusion(" in line:
+            m = _SHAPE_RE.search(line)
+            if m:
+                key = m.group(0)
+                sig[key] = sig.get(key, 0) + 1
+    return {k: v for k, v in sig.items() if v > 1}

@@ -1,0 +1,197 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+  compute_s    = HLO_FLOPs_per_chip / peak_FLOP/s
+  memory_s     = HLO_bytes_per_chip / HBM_bw
+  collective_s = wire_bytes_per_chip / link_bw
+
+``compiled.cost_analysis()`` reports the per-device SPMD module, so flops
+and bytes are already per chip.  MODEL_FLOPS uses 6·N·D (train) or 2·N·D
+(inference) with N = active params, D = tokens — the ratio
+MODEL_FLOPS/HLO_FLOPs exposes remat/dispatch overhead (>1/3 expected with
+full remat since backward recompute ≈ one extra forward).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from .hlo import CollectiveStats, collective_stats
+from .hw import HwSpec, V5E
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    wire_bytes_per_chip: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops_global: float
+    peak_bytes_per_chip: float
+    collectives: Dict[str, int]
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """No-overlap upper bound; roofline bound = max(terms)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs x chips)."""
+        total = self.flops_per_chip * self.chips
+        return self.model_flops_global / total if total else float("nan")
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization at the roofline bound."""
+        denom = self.step_time_s * self.chips
+        if not denom:
+            return float("nan")
+        return self.model_flops_global / (denom * V5E.peak_flops_bf16)
+
+    def row(self) -> Dict[str, Any]:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "model_flops": self.model_flops_global,
+            "useful_ratio": self.useful_flops_ratio,
+            "mfu_bound": self.mfu,
+            "hbm_gib_per_chip": self.peak_bytes_per_chip / 2**30,
+            "collectives": self.collectives,
+        }
+
+
+def _get(d: Dict[str, Any], *names: str) -> float:
+    for n in names:
+        if n in d and d[n]:
+            return float(d[n])
+    return 0.0
+
+
+def raw_counts(compiled, *, chips: int,
+               hlo_text: Optional[str] = None) -> Dict[str, Any]:
+    """(flops, bytes, wire_bytes, collective counts) of one executable.
+
+    NOTE: XLA cost analysis counts while-loop (lax.scan) bodies ONCE —
+    depth-extrapolation in the dry-run corrects this (launch.dryrun)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # older jax returns [dict]
+        ca = ca[0]
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    stats = collective_stats(text, num_partitions=chips)
+    return {
+        "flops": _get(ca, "flops"),
+        "bytes": _get(ca, "bytes accessed", "bytes_accessed"),
+        "wire_bytes": stats.wire_bytes,
+        "counts": stats.counts,
+    }
+
+
+def analyze_raw(*, flops: float, byts: float, wire: float,
+                counts: Dict[str, int], arch: str, shape: str,
+                mesh_name: str, chips: int, model_flops: float,
+                peak_bytes: float = float("nan"),
+                hw: HwSpec = V5E) -> RooflineReport:
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_chip=flops, bytes_per_chip=byts,
+        wire_bytes_per_chip=wire,
+        compute_s=flops / hw.peak_flops_bf16,
+        memory_s=byts / hw.hbm_bw,
+        collective_s=wire / hw.ici_link_bw,
+        model_flops_global=model_flops,
+        peak_bytes_per_chip=peak_bytes,
+        collectives=counts,
+    )
+
+
+def peak_memory(compiled) -> float:
+    try:
+        mem = compiled.memory_analysis()
+        return float(getattr(mem, "temp_size_in_bytes", 0)
+                     + getattr(mem, "argument_size_in_bytes", 0)
+                     + getattr(mem, "output_size_in_bytes", 0)
+                     - getattr(mem, "alias_size_in_bytes", 0))
+    except Exception:
+        return float("nan")
+
+
+def analyze(compiled, *, arch: str, shape: str, mesh_name: str, chips: int,
+            model_flops: float, hw: HwSpec = V5E,
+            hlo_text: Optional[str] = None) -> RooflineReport:
+    rc = raw_counts(compiled, chips=chips, hlo_text=hlo_text)
+    return analyze_raw(flops=rc["flops"], byts=rc["bytes"],
+                       wire=rc["wire_bytes"], counts=rc["counts"],
+                       arch=arch, shape=shape, mesh_name=mesh_name,
+                       chips=chips, model_flops=model_flops,
+                       peak_bytes=peak_memory(compiled), hw=hw)
+
+
+def model_flops(cfg, n_params_active: float, tokens: int,
+                train: bool) -> float:
+    return (6.0 if train else 2.0) * n_params_active * tokens
+
+
+def model_flops_cell(cfg, shape, n_params_active: float) -> float:
+    """Useful FLOPs of one step: weight matmuls (6ND/2ND) + attention
+    context term (4·H·Dh·S_kv per token per attention layer, x3 for the
+    backward pass) — the latter dominates the 32k cells."""
+    train = shape.kind == "train"
+    b, s = shape.global_batch, shape.seq_len
+    tokens = b * (s if shape.kind in ("train", "prefill") else 1)
+    total = (6.0 if train else 2.0) * n_params_active * tokens
+
+    if cfg.family == "ssm":
+        n_attn = 0
+    elif cfg.family == "hybrid":
+        n_attn = cfg.n_layers // cfg.attn_every
+    else:
+        n_attn = cfg.n_layers
+    hdh = cfg.n_heads * cfg.d_head
+    mult = 3.0 if train else 1.0
+    if shape.kind in ("train", "prefill"):
+        s_kv = s / 2.0  # causal average
+    else:
+        s_kv = float(s)  # decode: full context per new token
+    total += mult * n_attn * 4.0 * hdh * s_kv * tokens
+    if cfg.family == "audio":
+        enc_tokens = b * cfg.enc_seq
+        total += mult * (cfg.n_enc_layers or cfg.n_layers) * 4.0 * hdh \
+            * cfg.enc_seq * enc_tokens          # encoder self (bidir)
+        total += mult * cfg.n_layers * 4.0 * hdh * cfg.enc_seq * tokens
+    return total
+
+
+def count_params(params: Any) -> int:
+    return sum(int(np.prod(l.shape))
+               for l in jax.tree_util.tree_leaves(params))
+
+
+def count_active_params(params: Any, cfg) -> float:
+    """Total minus the non-routed fraction of expert banks."""
+    total = count_params(params)
+    if not getattr(cfg, "is_moe_arch", False) or cfg.n_experts == 0:
+        return float(total)
+    expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        names = [str(getattr(k, "key", getattr(k, "idx", k)))
+                 for k in path]
+        if "moe" in names and names[-1] in ("wi", "wg", "wo"):
+            expert += int(np.prod(leaf.shape))
+    return float(total - expert * (1.0 - cfg.top_k / cfg.n_experts))

@@ -1,0 +1,3 @@
+from .scheduler import Request, Result, ServeLoop
+
+__all__ = ["Request", "Result", "ServeLoop"]

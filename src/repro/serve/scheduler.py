@@ -1,0 +1,127 @@
+"""Continuous-batching serve loop (single-host reference implementation).
+
+Requests enter a FIFO; a fixed pool of B slots holds active sequences.
+Each tick: (1) free slots are refilled by prefilling queued prompts into
+the slot's cache rows, (2) one decode step advances every active slot,
+(3) finished rows (EOS or budget) are emitted.  The jitted hot path is the
+batched decode step; prefill is jitted per prompt-length bucket.
+
+This is the host-side analogue of the paper's ResourceManager admission
+queue (FCFS reservation), applied to serving slots instead of VMs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import ModelApi
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # [S] int32
+    max_new: int = 16
+    eos_id: int = -2            # -2: never (synthetic workloads)
+
+
+@dataclasses.dataclass
+class Result:
+    rid: int
+    tokens: List[int]
+    prefill_len: int
+    decode_steps: int
+
+
+class ServeLoop:
+    def __init__(self, api: ModelApi, params, *, slots: int = 4,
+                 max_len: int = 256, bucket: int = 32):
+        self.api = api
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.bucket = bucket
+        self.queue: Deque[Request] = deque()
+        self.active: Dict[int, dict] = {}          # slot -> request state
+        self.free = list(range(slots))
+        cfg = api.cfg
+        self.cache = api.init_cache(slots, max_len)
+        self._decode = jax.jit(
+            lambda p, t, c: api.decode_step(p, t, c))
+        self._prefill_1 = {}
+
+    # -- admission ---------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _bucketed(self, n: int) -> int:
+        return max(self.bucket, -(-n // self.bucket) * self.bucket)
+
+    def _prefill_fn(self, plen: int):
+        if plen not in self._prefill_1:
+            api = self.api
+
+            def fn(params, batch, cache):
+                return api.prefill(params, batch, cache)
+
+            self._prefill_1[plen] = jax.jit(fn)
+        return self._prefill_1[plen]
+
+    def _admit(self):
+        while self.free and self.queue:
+            slot = self.free.pop()
+            req = self.queue.popleft()
+            plen = self._bucketed(len(req.prompt))
+            prompt = np.full((plen,), 0, np.int32)
+            prompt[-len(req.prompt):] = req.prompt
+            # per-slot prefill into a fresh single-row cache, then splice
+            row_cache = self.api.init_cache(1, self.max_len)
+            logits, row_cache = self._prefill_fn(plen)(
+                self.params, {"tokens": jnp.asarray(prompt[None])},
+                row_cache)
+            self.cache = jax.tree_util.tree_map(
+                lambda full, row: full.at[:, slot:slot + 1].set(row)
+                if full.ndim >= 2 else full.at[slot].set(row[0]),
+                self.cache, row_cache)
+            tok = int(jnp.argmax(logits[0, -1]))
+            self.active[slot] = {"req": req, "tokens": [tok], "steps": 0,
+                                 "plen": plen}
+
+    # -- one tick ----------------------------------------------------------
+    def tick(self) -> List[Result]:
+        self._admit()
+        if not self.active:
+            return []
+        tokens = np.zeros((self.slots, 1), np.int32)
+        for slot, st in self.active.items():
+            tokens[slot, 0] = st["tokens"][-1]
+        logits, self.cache = self._decode(self.params,
+                                          jnp.asarray(tokens), self.cache)
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        done: List[Result] = []
+        for slot in list(self.active):
+            st = self.active[slot]
+            st["steps"] += 1
+            st["tokens"].append(int(nxt[slot]))
+            req = st["req"]
+            if (st["steps"] >= req.max_new
+                    or int(nxt[slot]) == req.eos_id):
+                done.append(Result(req.rid, st["tokens"], st["plen"],
+                                   st["steps"]))
+                del self.active[slot]
+                self.free.append(slot)
+        return done
+
+    def run(self, until_empty: bool = True, max_ticks: int = 10_000
+            ) -> List[Result]:
+        out: List[Result] = []
+        ticks = 0
+        while (self.queue or self.active) and ticks < max_ticks:
+            out.extend(self.tick())
+            ticks += 1
+        return out

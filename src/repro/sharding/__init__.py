@@ -1,0 +1,5 @@
+from .rules import (activation_spec, batch_specs, cache_specs_tree,
+                    data_axes, opt_state_specs, param_specs)
+
+__all__ = ["param_specs", "batch_specs", "activation_spec",
+           "cache_specs_tree", "data_axes", "opt_state_specs"]

@@ -1,0 +1,314 @@
+"""Logical -> physical sharding rules (path-based, mesh-shape agnostic).
+
+Scheme (see DESIGN.md): batch/data parallel over ``('pod', 'data')``,
+fully-sharded (FSDP/TP mix) params over ``'model'``:
+
+  * every weight matrix shards its FEATURE-EXPANDING dim over 'model'
+    (wq/wk/wv/wi/wg: out-dim; wo: in-dim) — contraction stays local,
+    XLA SPMD inserts the all-gather/reduce-scatter pairs;
+  * embeddings shard the vocab dim (row-parallel lookup);
+  * MoE expert banks shard the EXPERT dim over 'model' (EP);
+  * mamba shards d_inner over 'model';
+  * norms/scalars replicate;
+  * stacked-layer leading dims ([L, ...] from ``stack_params``) and the
+    hybrid period axis are never sharded (scan axis).
+
+Rules are keyed on the *param leaf path*, so any new model that reuses the
+layer zoo inherits a correct sharding with no extra code.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+MODEL = "model"
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    """The batch axes present in this mesh ('pod' optional)."""
+    names = mesh.axis_names if hasattr(mesh, "axis_names") else mesh
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+# (leaf-name, trailing-ndim) -> spec for the trailing dims.
+# Leading (stack) dims are padded with None automatically.
+_LEAF_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    # embeddings
+    "tok": (MODEL, None),            # [V, D] row (vocab) parallel
+    "w": (None, MODEL),              # unembed [D, V]
+    # attention
+    "wq": (None, MODEL), "wk": (None, MODEL), "wv": (None, MODEL),
+    "wo": (MODEL, None),
+    # mlp (and mamba out-proj handled by name below)
+    "wi": (None, MODEL), "wg": (None, MODEL),
+    # moe (3-d leaves override by ndim, see below)
+    "router": (None, None),
+    # mamba
+    "in_x": (None, MODEL), "in_z": (None, MODEL),
+    "x_proj": (MODEL, None), "dt_proj": (None, MODEL),
+    "dt_bias": (MODEL,), "a_log": (MODEL, None), "d_skip": (MODEL,),
+    "conv_w": (None, MODEL), "conv_b": (MODEL,),
+    "out": (MODEL, None),
+    # norms
+    "scale": (None,),
+}
+
+# MoE expert banks: [E, d_in, d_out] -> expert-parallel over 'model'
+_MOE_3D = (MODEL, None, None)
+
+
+def _leaf_spec(path: Tuple[str, ...], leaf: jnp.ndarray) -> P:
+    name = path[-1]
+    if name in ("wi", "wg", "wo") and leaf.ndim >= 3 and "moe" in path:
+        trailing = _MOE_3D
+    elif name in _LEAF_RULES:
+        trailing = _LEAF_RULES[name]
+    else:
+        trailing = (None,) * leaf.ndim
+    # trim/pad: leading stack dims get None
+    t = trailing[-leaf.ndim:] if len(trailing) > leaf.ndim else trailing
+    pad = (None,) * (leaf.ndim - len(t))
+    return P(*(pad + tuple(t)))
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "idx"):
+            names.append(str(k.idx))
+        else:
+            names.append(str(k))
+    return tuple(names)
+
+
+def param_specs(params: Any, mesh=None) -> Any:
+    """PartitionSpec pytree matching ``params``.
+
+    With ``mesh`` given, dims that do not divide the axis size fall back
+    to replicated (argument shardings must divide exactly, unlike
+    constraints — e.g. whisper's vocab 51865 on a 16-way axis)."""
+    sizes = (dict(zip(mesh.axis_names, mesh.devices.shape))
+             if mesh is not None else {})
+
+    def adjust(spec: P, leaf) -> P:
+        dims = []
+        for d, a in enumerate(tuple(spec) + (None,) * (leaf.ndim - len(spec))):
+            if a is None or not sizes:
+                dims.append(a)
+                continue
+            axes = a if isinstance(a, tuple) else (a,)
+            prod = 1
+            for n in axes:
+                prod *= sizes.get(n, 1)
+            dims.append(a if leaf.shape[d] % prod == 0 else None)
+        return P(*dims)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [adjust(_leaf_spec(_path_names(pth), l), l) for pth, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_state_specs(params: Any, mesh) -> Any:
+    """ZeRO optimizer-state sharding: the f32 moments are 4x the bf16
+    params, so they additionally shard over the DATA axes (first dim that
+    divides), on top of the params' 'model' sharding.  AdamW is
+    elementwise, so the update runs entirely in the moments' sharding;
+    only the (bf16) param slices reshard."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    da = tuple(a for a in ("pod", "data") if a in sizes)
+    dsize = 1
+    for a in da:
+        dsize *= sizes[a]
+    dspec = da if len(da) > 1 else (da[0] if da else None)
+
+    def one(spec: P, leaf) -> P:
+        if leaf.ndim == 0 or dsize <= 1:
+            return spec
+        dims = list(tuple(spec) + (None,) * (leaf.ndim - len(spec)))
+        for i in range(leaf.ndim):
+            if dims[i] is None and leaf.shape[i] % dsize == 0 \
+                    and leaf.shape[i] >= dsize:
+                dims[i] = dspec
+                break
+        return P(*dims)
+
+    base = param_specs(params, mesh)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    base_flat = jax.tree_util.tree_leaves(
+        base, is_leaf=lambda x: isinstance(x, P))
+    out = [one(sp, l) for (path, l), sp in zip(flat, base_flat)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_specs(batch: Any, mesh, *, fsdp: bool = True) -> Any:
+    """Batch dim over as many axes as divide it: FSDP mode tries
+    ('pod','data','model') — the model axis is the ZeRO shard domain AND a
+    batch axis — falling back to ('pod','data'), then replication (the
+    long_500k global_batch=1 case)."""
+    order = (("pod", "data", "model") if fsdp else ("pod", "data"))
+    axes = tuple(a for a in order if a in mesh.axis_names)
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return P()
+        t = axes
+        while t:
+            prod = 1
+            for a in t:
+                prod *= mesh_shape[a]
+            if leaf.shape[0] % prod == 0 and leaf.shape[0] >= prod:
+                break
+            t = t[:-1]
+        if not t:
+            return P(*(None,) * leaf.ndim)
+        spec = t if len(t) > 1 else t[0]
+        return P(spec, *(None,) * (leaf.ndim - 1))
+
+    return jax.tree_util.tree_map(one, batch)
+
+
+def shard_hint(x: jnp.ndarray, *dim_axes) -> jnp.ndarray:
+    """with_sharding_constraint that degrades to a no-op outside a mesh.
+
+    dim_axes: one entry per dim — an axis name, a tuple of names, or None.
+    Axes missing from the ambient mesh are dropped, and trailing axes are
+    trimmed until the dim size divides the axis product (so model code can
+    hint ('pod','data','model') unconditionally; a batch of 32 on a
+    256-chip submesh degrades to ('pod','data') etc.; smoke tests on one
+    device are unaffected).
+    """
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names:
+            return x
+        sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    except Exception:
+        return x
+
+    def keep(a, dim_size):
+        t = a if isinstance(a, (tuple, list)) else (a,)
+        t = tuple(n for n in t if n is not None and n in sizes)
+        while t:
+            prod = 1
+            for n in t:
+                prod *= sizes[n]
+            if dim_size % prod == 0:
+                break
+            t = t[:-1]
+        if not t:
+            return None
+        return t if len(t) > 1 else t[0]
+
+    spec = P(*(keep(a, d) for a, d in zip(dim_axes, x.shape)))
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def activation_hint(x: jnp.ndarray) -> jnp.ndarray:
+    """Layer-boundary [B,S,D] constraint: batch over every axis that
+    divides it; if 'model' is left idle (small global batch — the prefill
+    shapes), shard the SEQUENCE over it instead (sequence parallelism).
+    An idle mesh axis invites GSPMD to split contractions and all-reduce
+    activation-sized partials (a 275 GB/chip pattern in prefill_32k)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names:
+            return x
+        sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    except Exception:
+        return x
+    batch_axes = [a for a in ("pod", "data", "model") if a in sizes]
+    t = tuple(batch_axes)
+    while t:
+        prod = 1
+        for n in t:
+            prod *= sizes[n]
+        if x.shape[0] % prod == 0 and x.shape[0] >= prod:
+            break
+        t = t[:-1]
+    dims = [t if len(t) > 1 else (t[0] if t else None)]
+    dims += [None] * (x.ndim - 1)
+    if MODEL in sizes and MODEL not in t and x.ndim >= 3 \
+            and x.shape[1] % sizes[MODEL] == 0:
+        dims[1] = MODEL      # sequence parallel
+    if all(d is None for d in dims):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*dims))
+
+
+def replicate_hint(x: jnp.ndarray) -> jnp.ndarray:
+    """Constrain to fully replicated inside jit (no-op outside a mesh).
+
+    Applied to a model-sharded weight at its use site this forces the
+    FSDP/ZeRO-3 pattern: all-gather the weight in forward, reduce-scatter
+    its gradient in backward (the constraint's transpose)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names:
+            return x
+    except Exception:
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*(None,) * x.ndim))
+
+
+def fsdp_params(tree: Any, cfg=None) -> Any:
+    """replicate_hint over every leaf (gate with cfg.fsdp when given)."""
+    if cfg is not None and not getattr(cfg, "fsdp", True):
+        return tree
+    return jax.tree_util.tree_map(replicate_hint, tree)
+
+
+def activation_spec(mesh, ndim: int = 3) -> P:
+    da = data_axes(mesh)
+    spec = da if len(da) > 1 else (da[0] if da else None)
+    return P(spec, *(None,) * (ndim - 1))
+
+
+def cache_specs_tree(cache: Any, mesh, *, batch_axis_of: int = 1) -> Any:
+    """Decode-cache sharding: batch over data axes (when divisible) AND the
+    longest non-batch dim over 'model'.
+
+    KV tensors [L, B, S, KV, Dh] shard (B -> data, S -> model): the
+    32k-context caches are the dominant HBM consumers in decode cells.
+    Mamba states [L, B, Di, N] shard Di over 'model'.  The long_500k B=1
+    cells keep batch replicated and ride the model-dim sharding.
+    """
+    da = data_axes(mesh)
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    data_size = 1
+    for a in da:
+        data_size *= mesh_shape[a]
+    dspec = da if len(da) > 1 else (da[0] if da else None)
+    msize = mesh_shape.get(MODEL, 1)
+
+    def one(path, leaf):
+        names = _path_names(path)
+        if leaf.ndim == 0 or names[-1] == "len":
+            return P()
+        dims = [None] * leaf.ndim
+        b = leaf.shape[batch_axis_of] if leaf.ndim > batch_axis_of else 1
+        if b % max(data_size, 1) == 0 and b >= data_size:
+            dims[batch_axis_of] = dspec
+        # model-shard the LAST dim (Dh for KV caches, d_inner/N for mamba):
+        # scatter-at-position and per-head attention stay LOCAL (S-sharding
+        # forces per-layer cache gathers); fall back to the widest dim.
+        if msize > 1:
+            cand_dims = [i for i in range(leaf.ndim - 1, 0, -1)
+                         if i != batch_axis_of]
+            cand_dims.sort(key=lambda i: (i != leaf.ndim - 1,
+                                          -leaf.shape[i]))
+            for cand in cand_dims:
+                if leaf.shape[cand] % msize == 0 and \
+                        leaf.shape[cand] >= msize:
+                    dims[cand] = MODEL
+                    break
+        return P(*dims)
+
+    return jax.tree_util.tree_map_with_path(one, cache)

@@ -1,0 +1,26 @@
+"""Next-token cross-entropy with z-loss and padding mask."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+PAD_ID = -1
+
+
+def lm_loss(logits: jnp.ndarray, labels: jnp.ndarray, *,
+            z_loss: float = 1e-4, aux_loss: jnp.ndarray | float = 0.0,
+            aux_weight: float = 1e-2):
+    """logits [B,S,V] f32; labels [B,S] int32 (PAD_ID = ignore)."""
+    logits = logits.astype(jnp.float32)
+    mask = (labels != PAD_ID)
+    safe = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    zl = jnp.square(lse)
+    denom = jnp.maximum(jnp.sum(mask), 1)
+    ce = jnp.sum(jnp.where(mask, nll, 0.0)) / denom
+    z = jnp.sum(jnp.where(mask, zl, 0.0)) / denom
+    total = ce + z_loss * z + aux_weight * aux_loss
+    return total, {"ce": ce, "z": z, "aux": jnp.asarray(aux_loss),
+                   "tokens": denom}

@@ -1,0 +1,127 @@
+"""From-scratch optimizer stack: AdamW + cosine schedule + global-norm clip
++ (beyond-paper) error-feedback int8 gradient compression.
+
+No optax dependency — the optimizer is three pure functions over pytrees so
+it shards trivially under pjit (opt state inherits the param specs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    lr_min: float = 3e-5
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    # gradient compression (int8 + error feedback) — applied to the grads
+    # before the optimizer; models the paper-style "reduce bytes on the
+    # wire" knob (DESIGN.md §Beyond-paper).
+    compress: bool = False
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+    err: Any  # error-feedback residual (zeros when compress=False)
+
+
+def lr_schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.lr_min + 0.5 * (cfg.lr_peak - cfg.lr_min) * (1 + jnp.cos(jnp.pi * t))
+    return warm * jnp.where(step < cfg.warmup_steps, cfg.lr_peak, cos)
+
+
+def init(cfg: AdamWConfig, params: Any) -> OptState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    err = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params) \
+        if cfg.compress else jax.tree_util.tree_map(lambda p: jnp.zeros((), jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                    nu=jax.tree_util.tree_map(jnp.copy, zeros), err=err)
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def _quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_grads(grads: Any, err: Any) -> Tuple[Any, Any]:
+    """Int8 quantization with error feedback: g' = deq(q(g + e)),
+    e' = (g + e) - g'.  On real multi-pod runs the int8 payload is what
+    crosses the 'pod' axis; here the transform models the precision loss
+    so convergence effects are measurable in tests."""
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, scale = _quantize_int8(gf)
+        deq = q.astype(jnp.float32) * scale
+        return deq.astype(g.dtype), gf - deq
+
+    # two passes (XLA CSE dedups the shared work under jit); avoids
+    # tuple-leaf ambiguity with tuple-structured param trees (hybrid).
+    new_g = jax.tree_util.tree_map(lambda g, e: one(g, e)[0], grads, err)
+    new_e = jax.tree_util.tree_map(lambda g, e: one(g, e)[1], grads, err)
+    return new_g, new_e
+
+
+def update(cfg: AdamWConfig, grads: Any, state: OptState, params: Any
+           ) -> Tuple[Any, OptState, dict]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    # NOTE: do NOT materialize an f32 grad tree here — the f32 cast happens
+    # inside the per-leaf update, where GSPMD computes it in the (ZeRO
+    # data+model-sharded) moment sharding instead of the 'model'-only param
+    # sharding (an 8 GiB/chip difference for 30B-param cells).
+
+    err = state.err
+    if cfg.compress:
+        grads = jax.tree_util.tree_map(
+            lambda g: g.astype(jnp.float32) * scale, grads)
+        scale = 1.0
+        grads, err = compress_grads(grads, state.err)
+
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def one(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        upd = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        decay = cfg.weight_decay * p.astype(jnp.float32) \
+            if p.ndim >= 2 else 0.0  # no decay on norms/biases
+        new_p = p.astype(jnp.float32) - lr * (upd + decay)
+        return new_p.astype(p.dtype), m, v
+
+    tm = jax.tree_util.tree_map
+    new_p = tm(lambda p, g, m, v: one(p, g, m, v)[0],
+               params, grads, state.mu, state.nu)
+    new_m = tm(lambda p, g, m, v: one(p, g, m, v)[1],
+               params, grads, state.mu, state.nu)
+    new_v = tm(lambda p, g, m, v: one(p, g, m, v)[2],
+               params, grads, state.mu, state.nu)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, OptState(step, new_m, new_v, err), metrics

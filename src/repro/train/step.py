@@ -1,0 +1,83 @@
+"""train_step / serve_step builders — the functions the launcher jits.
+
+``make_train_step(api, opt_cfg)`` returns a pure
+``(params, opt_state, batch) -> (params, opt_state, metrics)``;
+``make_prefill_step`` / ``make_decode_step`` wrap the serve path.  The
+dry-run lowers exactly these functions for every (arch x shape) cell.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import ModelApi
+from . import optim
+from .loss import lm_loss
+
+
+def make_train_step(api: ModelApi, opt_cfg: optim.AdamWConfig, *,
+                    backend: str = "chunked", remat: bool = True,
+                    microbatch: int = 0) -> Callable:
+    """Standard data-parallel step; optional gradient micro-batching
+    (sequential accumulation) for memory-bound cells."""
+
+    def loss_fn(params, batch):
+        out = api.apply(params, {k: v for k, v in batch.items()
+                                 if k != "labels"},
+                        backend=backend, remat=remat)
+        return lm_loss(out["logits"], batch["labels"],
+                       aux_loss=out.get("aux_loss", 0.0))
+
+    def grads_of(params, batch):
+        (loss, met), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        return loss, met, grads
+
+    def step(params, opt_state, batch):
+        if microbatch and microbatch > 1:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatch, b // microbatch, *x.shape[1:])
+
+            mb = jax.tree_util.tree_map(split, batch)
+
+            def acc_fn(carry, mbatch):
+                loss_a, grads_a = carry
+                loss, met, grads = grads_of(params, mbatch)
+                grads_a = jax.tree_util.tree_map(jnp.add, grads_a, grads)
+                return (loss_a + loss, grads_a), met
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            from repro.util import scan as _scan
+            (loss, grads), mets = _scan(
+                acc_fn, (jnp.float32(0.0), zeros), mb)
+            loss = loss / microbatch
+            grads = jax.tree_util.tree_map(lambda g: g / microbatch, grads)
+            met = jax.tree_util.tree_map(lambda m: m[-1], mets)
+        else:
+            loss, met, grads = grads_of(params, batch)
+        params, opt_state, omet = optim.update(opt_cfg, grads, opt_state,
+                                               params)
+        metrics = {"loss": loss, **met, **omet}
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_prefill_step(api: ModelApi, *, backend: str = "chunked") -> Callable:
+    def step(params, batch, cache):
+        return api.prefill(params, batch, cache, backend=backend)
+    return step
+
+
+def make_decode_step(api: ModelApi) -> Callable:
+    def step(params, tokens, cache, batch_extra=None):
+        if batch_extra is not None:
+            return api.decode_step(params, tokens, cache,
+                                   batch_extra=batch_extra)
+        return api.decode_step(params, tokens, cache)
+    return step

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# smoke tests and benches must see ONE device — the 512-device flag is set
+# only inside launch/dryrun.py (per the assignment).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,130 @@
+"""DES engine: closed-form scenarios, invariants, paper-claim direction."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (PolicyConfig, ROUTE_LEGACY, ROUTE_SDN,
+                        TRAFFIC_WATERFILL, paper_setup, simulate,
+                        simulate_batch, summarize)
+from repro.core.flows import Flow, flows_setup
+from repro.core.mapreduce import DONE, VOID
+from repro.core.topology import torus_2d
+
+
+@pytest.fixture(scope="module")
+def two_hosts():
+    return torus_2d(2, 1, bw=1e9)
+
+
+def t(topo, flows, **pol):
+    s = simulate(flows_setup(topo, flows), PolicyConfig(**pol))
+    assert not bool(s.stalled)
+    return float(s.time)
+
+
+def test_single_flow_closed_form(two_hosts):
+    assert t(two_hosts, [Flow(0, 1, 8.0)]) == pytest.approx(8.0, rel=1e-4)
+
+
+def test_two_flows_share_link(two_hosts):
+    assert t(two_hosts, [Flow(0, 1, 8.0)] * 2) == pytest.approx(16.0,
+                                                                rel=1e-3)
+
+
+def test_full_duplex(two_hosts):
+    assert t(two_hosts, [Flow(0, 1, 8.0), Flow(1, 0, 8.0)]) == \
+        pytest.approx(8.0, rel=1e-3)
+
+
+def test_rounds_serialize(two_hosts):
+    fl = [Flow(0, 1, 8.0, round=0), Flow(0, 1, 8.0, round=1)]
+    assert t(two_hosts, fl) == pytest.approx(16.0, rel=1e-3)
+
+
+def test_unequal_finish_releases_bandwidth(two_hosts):
+    # 2 Gb and 6 Gb share 1 Gbps: both at 0.5 until t=4 (2Gb done),
+    # then 4 Gb remain at full rate -> total 8 s
+    fl = [Flow(0, 1, 2.0), Flow(0, 1, 6.0)]
+    assert t(two_hosts, fl) == pytest.approx(8.0, rel=1e-3)
+
+
+def test_conservation_and_clock():
+    setup = paper_setup(seed=0)
+    s = simulate(setup, PolicyConfig())
+    assert not bool(s.stalled)
+    # every valid packet fully delivered, every valid task fully executed
+    valid_p = np.asarray(setup.pkt_valid)
+    assert np.all(np.asarray(s.pkt_state)[valid_p] == DONE)
+    assert np.all(np.asarray(s.pkt_rem)[valid_p] <=
+                  np.asarray(setup.pkt_bits)[valid_p] * 1e-5 + 1.0)
+    assert np.all(np.asarray(s.task_state)[np.asarray(setup.task_valid)]
+                  == DONE)
+    # finish times are within [start, end] and non-negative durations
+    dur = np.asarray(s.pkt_finish - s.pkt_start)[valid_p]
+    assert np.all(dur >= -1e-5)
+    assert float(s.time) > 0
+
+
+def test_energy_positive_and_bounded():
+    setup = paper_setup(seed=0)
+    s = simulate(setup, PolicyConfig())
+    host_e = np.asarray(s.host_energy)
+    sw_e = np.asarray(s.switch_energy)
+    assert np.all(host_e >= 0) and np.all(sw_e >= 0)
+    # no device can exceed peak power x makespan
+    T = float(s.time)
+    assert np.all(host_e <= 250.0 * T + 1)
+    # switches: static + all ports (generous bound)
+    assert np.all(sw_e <= (100.0 + 64 * 10.0) * T + 1)
+
+
+def test_sdn_beats_legacy_on_paper_usecase():
+    """The paper's qualitative claim (§5.3): SDN >= legacy on all three."""
+    setup = paper_setup(seed=0)
+    rs = summarize(setup, simulate(setup, PolicyConfig(
+        routing=ROUTE_SDN, job_concurrency=2)))
+    rl = summarize(setup, simulate(setup, PolicyConfig(
+        routing=ROUTE_LEGACY, job_concurrency=2)))
+    assert np.nanmean(rs["transmission_time"]) < \
+        np.nanmean(rl["transmission_time"])
+    assert np.nanmean(rs["completion_measured"]) < \
+        np.nanmean(rl["completion_measured"])
+    assert rs["total_energy_j"] < rl["total_energy_j"]
+
+
+def test_waterfill_not_slower():
+    setup = paper_setup(seed=0)
+    base = summarize(setup, simulate(setup, PolicyConfig()))
+    wf = summarize(setup, simulate(setup, PolicyConfig(
+        traffic=TRAFFIC_WATERFILL)))
+    assert wf["makespan_s"] <= base["makespan_s"] * 1.05
+
+
+def test_vmapped_policy_sweep():
+    setup = paper_setup(seed=0)
+    pols = {
+        "routing": jnp.asarray([ROUTE_SDN, ROUTE_LEGACY]),
+        "traffic": jnp.asarray([0, 0]),
+        "placement": jnp.asarray([0, 0]),
+        "job_selection": jnp.asarray([0, 0]),
+        "job_concurrency": jnp.asarray([2, 2]),
+        "seed": jnp.asarray([0, 0]),
+    }
+    s = simulate_batch(setup, pols)
+    assert s.time.shape == (2,)
+    single = simulate(setup, PolicyConfig(routing=ROUTE_SDN,
+                                          job_concurrency=2))
+    assert float(s.time[0]) == pytest.approx(float(single.time), rel=1e-5)
+
+
+def test_stall_detected_on_disconnected():
+    # two 2-node islands: 0-1 connected, 2-3 connected, no bridge.
+    from repro.core.topology import Topology
+    import numpy as np_
+    iso = Topology(n_hosts=4, n_switches=0, n_storage=0,
+                   link_src=np_.asarray([0, 1, 2, 3], np_.int32),
+                   link_dst=np_.asarray([1, 0, 3, 2], np_.int32),
+                   link_bw=np_.full(4, 1e9, np_.float32))
+    setup = flows_setup(iso, [Flow(0, 2, 1.0)])   # unreachable pair
+    s = simulate(setup, PolicyConfig())
+    assert bool(s.stalled)

@@ -1,0 +1,83 @@
+"""Fair-share bandwidth properties (hypothesis)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.fairshare import eq3_rates, waterfill_rates
+
+INTRA = 1e12
+
+
+def _random_instance(draw):
+    n_links = draw(st.integers(2, 8))
+    n_flows = draw(st.integers(1, 10))
+    max_hops = draw(st.integers(1, 4))
+    bw = np.array([draw(st.floats(0.5, 10.0)) for _ in range(n_links)],
+                  np.float32)
+    routes = np.full((n_flows, max_hops), -1, np.int32)
+    for f in range(n_flows):
+        hops = draw(st.integers(1, min(max_hops, n_links)))
+        links = draw(st.lists(st.integers(0, n_links - 1), min_size=hops,
+                              max_size=hops, unique=True))
+        routes[f, :hops] = links
+    active = np.array([draw(st.booleans()) for _ in range(n_flows)])
+    return bw, routes, active
+
+
+@st.composite
+def instances(draw):
+    return _random_instance(draw)
+
+
+def link_loads(routes, rates, n_links):
+    load = np.zeros(n_links)
+    for f in range(routes.shape[0]):
+        for li in routes[f]:
+            if li >= 0:
+                load[li] += rates[f]
+    return load
+
+
+@given(instances())
+@settings(max_examples=60, deadline=None)
+def test_eq3_never_oversubscribes(inst):
+    bw, routes, active = inst
+    rates = np.asarray(eq3_rates(jnp.asarray(routes), jnp.asarray(active),
+                                 jnp.asarray(bw), INTRA))
+    assert np.all(rates[~active] == 0)
+    load = link_loads(routes, rates, bw.shape[0])
+    assert np.all(load <= bw * (1 + 1e-4))
+
+
+@given(instances())
+@settings(max_examples=60, deadline=None)
+def test_waterfill_no_oversubscribe_and_saturation(inst):
+    bw, routes, active = inst
+    rates = np.asarray(waterfill_rates(jnp.asarray(routes),
+                                       jnp.asarray(active),
+                                       jnp.asarray(bw), INTRA))
+    load = link_loads(routes, rates, bw.shape[0])
+    assert np.all(load <= bw * (1 + 1e-3))
+    # max-min: every active flow crosses at least one (nearly) saturated
+    # link — otherwise its rate could grow (Pareto violation)
+    for f in range(routes.shape[0]):
+        if not active[f] or routes[f].max() < 0:
+            continue
+        sat = False
+        for li in routes[f]:
+            if li >= 0 and load[li] >= bw[li] * (1 - 1e-2):
+                sat = True
+        assert sat, f"flow {f} not bottlenecked anywhere"
+
+
+@given(instances())
+@settings(max_examples=40, deadline=None)
+def test_waterfill_total_throughput_geq_eq3(inst):
+    bw, routes, active = inst
+    r3 = np.asarray(eq3_rates(jnp.asarray(routes), jnp.asarray(active),
+                              jnp.asarray(bw), INTRA))
+    rw = np.asarray(waterfill_rates(jnp.asarray(routes),
+                                    jnp.asarray(active),
+                                    jnp.asarray(bw), INTRA))
+    assert rw.sum() >= r3.sum() * (1 - 1e-3)

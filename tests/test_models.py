@@ -1,0 +1,130 @@
+"""Model zoo: per-arch smoke + serve-path consistency oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import get_model
+from repro.models.attention import chunked_attention, naive_attention
+
+KEY = jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, b, s):
+    if cfg.family == "vlm":
+        return {"embeds": jax.random.normal(KEY, (b, s, cfg.d_model),
+                                            cfg.dtype),
+                "pos3": jnp.tile(jnp.arange(s)[None, :, None], (b, 1, 3))}
+    if cfg.family == "audio":
+        return {"enc_embeds": jax.random.normal(
+                    KEY, (b, cfg.enc_seq, cfg.d_model), cfg.dtype),
+                "tokens": jax.random.randint(KEY, (b, s), 0, cfg.vocab)}
+    return {"tokens": jax.random.randint(KEY, (b, s), 0, cfg.vocab)}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_shapes_no_nans(arch):
+    cfg = get_smoke_config(arch)
+    api = get_model(cfg)
+    params = api.init(KEY)
+    b, s = 2, 16
+    out = jax.jit(lambda p, bb: api.apply(p, bb))(params, make_batch(cfg, b, s))
+    assert out["logits"].shape == (b, s, cfg.vocab)
+    assert not np.any(np.isnan(np.asarray(out["logits"], np.float32)))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_instantiable(arch):
+    """The EXACT published config builds abstract params (no allocation)."""
+    cfg = get_config(arch)
+    api = get_model(cfg)
+    sds = jax.eval_shape(api.init, KEY)
+    n = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(sds))
+    assert n > 1e8  # every assigned arch is >100M params
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "falcon-mamba-7b",
+                                  "jamba-v0.1-52b", "whisper-base",
+                                  "qwen3-moe-30b-a3b"])
+def test_prefill_decode_matches_full_forward(arch):
+    """Greedy digits: decode-with-cache must equal the full forward.
+
+    MoE capacity dropping is batch-context-dependent, so give MoE configs
+    enough capacity that no token drops (the equivalence precondition)."""
+    import dataclasses
+    cfg = get_smoke_config(arch)
+    if cfg.is_moe_arch:
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    api = get_model(cfg)
+    params = api.init(KEY)
+    b, s = 2, 12
+    batch = make_batch(cfg, b, s)
+    full = api.apply(params, batch, remat=False)["logits"]
+
+    cache = api.init_cache(b, 32)
+    logits_p, cache = api.prefill(params, batch, cache)
+    # prefill returns last-position logits == full forward's last position
+    np.testing.assert_allclose(np.asarray(logits_p[:, 0], np.float32),
+                               np.asarray(full[:, -1], np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+    # one decode step with token s must match forward over s+1 tokens
+    tok = jnp.full((b, 1), 7, jnp.int32)
+    if cfg.family == "vlm":
+        extra = {"embeds": jax.random.normal(KEY, (b, 1, cfg.d_model),
+                                             cfg.dtype),
+                 "pos3": jnp.full((b, 1, 3), s, jnp.int32)}
+        logits_d, _ = api.decode_step(params, None, cache,
+                                      batch_extra=extra)
+        return  # full-forward comparison needs embed concat; smoke only
+    logits_d, _ = api.decode_step(params, tok, cache)
+    batch2 = dict(batch)
+    batch2["tokens"] = jnp.concatenate([batch["tokens"], tok], axis=1)
+    full2 = api.apply(params, batch2, remat=False)["logits"]
+    np.testing.assert_allclose(np.asarray(logits_d[:, 0], np.float32),
+                               np.asarray(full2[:, -1], np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_chunked_attention_matches_naive():
+    for (b, sq, h, kv, dh, blk) in [(2, 64, 4, 2, 32, 16),
+                                    (1, 100, 4, 4, 16, 64),
+                                    (2, 33, 8, 2, 16, 8)]:
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (b, sq, h, dh), jnp.float32)
+        k = jax.random.normal(ks[1], (b, sq, kv, dh), jnp.float32)
+        v = jax.random.normal(ks[2], (b, sq, kv, dh), jnp.float32)
+        got = chunked_attention(q, k, v, causal=True, block_k=blk)
+        want = naive_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_moe_capacity_drop_and_mixing():
+    from repro.models.moe import moe_apply, moe_init, _capacity
+    cfg = get_smoke_config("qwen3-moe-30b-a3b")
+    p = moe_init(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 16, cfg.d_model), cfg.dtype)
+    out, aux = moe_apply(p, x, cfg)
+    assert out.shape == x.shape
+    assert float(aux) >= 1.0 - 1e-3   # Switch aux loss lower bound is 1
+    # capacity is TPU-aligned
+    assert _capacity(32, cfg) % 8 == 0
+
+
+def test_mamba_chunked_scan_vs_sequential():
+    from repro.kernels.selective_scan.ref import selective_scan_ref
+    from repro.models.ssm import _scan_chunked
+    b, s, d, n = 2, 37, 8, 4
+    ks = jax.random.split(KEY, 3)
+    a = jax.random.uniform(ks[0], (b, s, d, n), jnp.float32, 0.6, 0.99)
+    bb = jax.random.normal(ks[1], (b, s, d, n), jnp.float32) * 0.1
+    c = jax.random.normal(ks[2], (b, s, n), jnp.float32)
+    h, h_last = _scan_chunked(a, bb, jnp.zeros((b, d, n)), chunk=8)
+    y = jnp.einsum("bsdn,bsn->bsd", h, c)
+    want = selective_scan_ref(a, bb, c)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_last), np.asarray(h[:, -1]),
+                               rtol=1e-5)

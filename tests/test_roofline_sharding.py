@@ -1,0 +1,127 @@
+"""Roofline HLO parser, hardware model, advisor, and sharding rules."""
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.roofline import V5E, advise_allreduce, analytic_time
+from repro.roofline.hlo import collective_stats
+from repro.roofline.terms import count_active_params, count_params
+from repro.sharding.rules import batch_specs, cache_specs_tree, param_specs
+
+HLO = """
+HloModule test
+ENTRY main {
+  %p = f32[128,256]{1,0} parameter(0)
+  %ag = f32[128,4096]{1,0} all-gather(%p), replica_groups=[16,16]<=[256], dimensions={1}
+  %ar = bf16[512,512]{1,0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %rs = f32[32,256]{1,0} reduce-scatter(%y), replica_groups=[2,8]<=[16], dimensions={0}
+  %cp = f32[64,64]{1,0} collective-permute(%z), source_target_pairs={{0,1}}
+  %aa = bf16[16,1024]{1,0} all-to-all(%w), replica_groups=[4,4]<=[16]
+}
+"""
+
+
+def test_collective_parser_bytes():
+    st = collective_stats(HLO, num_partitions=256)
+    assert st.counts == {"all-gather": 1, "all-reduce": 1,
+                         "reduce-scatter": 1, "collective-permute": 1,
+                         "all-to-all": 1}
+    ag = 128 * 4096 * 4
+    ar = 512 * 512 * 2
+    rs = 32 * 256 * 4
+    cp = 64 * 64 * 4
+    aa = 16 * 1024 * 2
+    want = (ag * 15 / 16          # all-gather: out x (n-1)/n, group 16
+            + 2 * ar * 3 / 4      # all-reduce: 2 x size x (n-1)/n, group 4
+            + rs * 8 * 7 / 8      # reduce-scatter: out x n x (n-1)/n
+            + cp                  # permute: size
+            + aa * 3 / 4)         # all-to-all
+    assert st.wire_bytes == pytest.approx(want, rel=1e-6)
+
+
+def test_parser_ignores_non_collectives():
+    st = collective_stats("  %f = f32[8,8]{1,0} fusion(%a), kind=kLoop",
+                          num_partitions=8)
+    assert st.total_count == 0 and st.wire_bytes == 0
+
+
+def test_analytic_ring_times():
+    # 100 MB over 16 chips at 50 GB/s
+    t = analytic_time("ring", 16, 100e6)
+    assert t == pytest.approx(2 * 15 / 16 * 100e6 / 50e9, rel=1e-9)
+    assert analytic_time("ring-bidir", 16, 100e6) == pytest.approx(t / 2)
+
+
+def test_advisor_des_matches_analytic():
+    for a in advise_allreduce(10e6, (2, 2)):
+        an = analytic_time(a.schedule, 4, 10e6, V5E, (2, 2))
+        assert a.predicted_s == pytest.approx(an, rel=1e-3), a.schedule
+        assert a.source == "des"
+
+
+def _mesh(shape, axes):
+    dev = np.empty(shape, dtype=object)
+    return types.SimpleNamespace(axis_names=axes, devices=dev)
+
+
+def test_param_specs_rules():
+    params = {
+        "embed": {"tok": jax.ShapeDtypeStruct((1024, 64), jnp.bfloat16)},
+        "layers": {"attn": {"wq": jax.ShapeDtypeStruct((4, 64, 128),
+                                                       jnp.bfloat16)},
+                   "moe": {"wi": jax.ShapeDtypeStruct((4, 16, 64, 32),
+                                                      jnp.bfloat16)},
+                   "ln1": {"scale": jax.ShapeDtypeStruct((64,),
+                                                         jnp.bfloat16)}},
+    }
+    specs = param_specs(params)
+    assert specs["embed"]["tok"] == P("model", None)
+    assert specs["layers"]["attn"]["wq"] == P(None, None, "model")
+    assert specs["layers"]["moe"]["wi"] == P(None, "model", None, None)
+    assert specs["layers"]["ln1"]["scale"] == P(None)
+
+
+def test_param_specs_divisibility_fallback():
+    mesh = _mesh((2, 16), ("data", "model"))
+    params = {"embed": {"tok": jax.ShapeDtypeStruct((51865, 512),
+                                                    jnp.bfloat16)}}
+    specs = param_specs(params, mesh)
+    assert specs["embed"]["tok"] == P(None, None)  # 51865 % 16 != 0
+
+
+def test_batch_specs_cascade():
+    mesh = _mesh((2, 4, 8), ("pod", "data", "model"))
+    b = {"tokens": jax.ShapeDtypeStruct((64, 128), jnp.int32),
+         "one": jax.ShapeDtypeStruct((1, 128), jnp.int32),
+         "mid": jax.ShapeDtypeStruct((8, 128), jnp.int32)}
+    specs = batch_specs(b, mesh)
+    assert specs["tokens"] == P(("pod", "data", "model"), None)
+    assert specs["one"] == P(None, None)
+    assert specs["mid"] == P(("pod", "data"), None)
+
+
+def test_cache_specs():
+    mesh = _mesh((16, 16), ("data", "model"))
+    cache = {"k": jax.ShapeDtypeStruct((36, 128, 32768, 8, 128),
+                                       jnp.bfloat16),
+             "len": jax.ShapeDtypeStruct((128,), jnp.int32)}
+    specs = cache_specs_tree(cache, mesh)
+    assert specs["k"] == P(None, "data", None, None, "model")
+    assert specs["len"] == P()
+
+
+def test_active_params_moe():
+    from repro.configs import get_smoke_config
+    from repro.models import get_model
+    cfg = get_smoke_config("qwen3-moe-30b-a3b")
+    api = get_model(cfg)
+    sds = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    total = count_params(sds)
+    active = count_active_params(sds, cfg)
+    assert active < total
+    # top-2 of 8 experts: expert params scale by 1/4
+    assert active > total * 0.2

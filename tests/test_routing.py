@@ -1,0 +1,88 @@
+"""Routing oracles: APSP vs Floyd-Warshall, candidate-route validity."""
+import numpy as np
+import pytest
+
+from repro.core.routing import (build_route_table, hop_distances_np,
+                                min_plus_square_np)
+from repro.core.topology import fat_tree, paper_fat_tree, torus_2d
+
+
+def floyd_warshall(adj):
+    d = adj.astype(np.float64).copy()
+    n = d.shape[0]
+    for k in range(n):
+        d = np.minimum(d, d[:, k:k + 1] + d[k:k + 1, :])
+    return d
+
+
+def random_graph(n, m, seed):
+    rng = np.random.RandomState(seed)
+    adj = np.full((n, n), np.inf)
+    np.fill_diagonal(adj, 0.0)
+    for _ in range(m):
+        i, j = rng.randint(0, n, 2)
+        if i != j:
+            adj[i, j] = 1.0
+    return adj
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_hop_distances_vs_floyd_warshall(seed):
+    adj = random_graph(24, 80, seed)
+    got = hop_distances_np(adj.astype(np.float32))
+    want = floyd_warshall(adj)
+    finite = np.isfinite(want)
+    assert np.array_equal(np.isfinite(got), finite)
+    assert np.allclose(got[finite], want[finite])
+
+
+@pytest.mark.parametrize("topo_fn", [paper_fat_tree,
+                                     lambda: fat_tree(4),
+                                     lambda: torus_2d(4, 4)])
+def test_route_table_paths_are_valid(topo_fn):
+    topo = topo_fn()
+    rt = build_route_table(topo, k_max=8)
+    dist = hop_distances_np(topo.hop_matrix())
+    n = topo.n_nodes
+    src_l, dst_l = topo.link_src, topo.link_dst
+    checked = 0
+    for src in range(0, n, max(1, n // 8)):
+        for dst in range(0, n, max(1, n // 8)):
+            p = src * n + dst
+            for k in range(int(rt.n_cand[p])):
+                hops = int(rt.route_len[p, k])
+                assert hops == int(dist[src, dst])   # shortest
+                node = src
+                for h in range(hops):
+                    li = int(rt.routes[p, k, h])
+                    assert li >= 0
+                    assert int(src_l[li]) == node    # contiguous
+                    node = int(dst_l[li])
+                assert node == dst                   # reaches dst
+                checked += 1
+    assert checked > 0
+
+
+def test_paper_topology_counts():
+    topo = paper_fat_tree()
+    assert topo.n_hosts == 16
+    assert topo.n_switches == 20
+    assert topo.n_storage == 1
+    rt = build_route_table(topo, k_max=16)
+    nc = rt.n_cand.reshape(topo.n_nodes, topo.n_nodes)
+    # SAN -> host: 2 parallel core-agg cables => 2 equal-hop routes
+    assert nc[topo.storage(0), 0] == 2
+    # inter-pod host pair: 2 agg x 2 core x 2 parallel x 2 parallel = 16
+    assert nc[0, 4] == 16
+    # same-edge pair: single route via the edge switch
+    assert nc[0, 1] == 1
+
+
+def test_candidates_distinct():
+    topo = paper_fat_tree()
+    rt = build_route_table(topo, k_max=16)
+    n = topo.n_nodes
+    p = 0 * n + 4
+    routes = [tuple(rt.routes[p, k, :rt.route_len[p, k]])
+              for k in range(int(rt.n_cand[p]))]
+    assert len(set(routes)) == len(routes)
