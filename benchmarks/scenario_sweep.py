@@ -1,0 +1,75 @@
+"""Scenario-diversity benchmark: topology x placement-policy grid as ONE
+vmapped tensor program (paper contribution 6: "works for any topology").
+
+Runs the paper's §5 fabric plus k-ary fat-tree, leaf-spine and
+canonical-tree fabrics — each with its own workload shape — against
+multiple placement policies, padded to a common tensor shape and swept in
+a single ``jit(vmap(...))`` call (DESIGN.md §5).
+
+  PYTHONPATH=src python benchmarks/scenario_sweep.py
+  PYTHONPATH=src python benchmarks/scenario_sweep.py \
+      --scenarios paper-fabric fat-tree leaf-spine --seeds 2
+"""
+import argparse
+import time
+
+import jax
+
+from repro.core import (PLACE_LEAST_USED, PLACE_RANDOM, PLACE_ROUND_ROBIN,
+                        PolicyConfig)
+from repro.scenarios import get_scenario, list_scenarios, sweep_grid
+
+PLACEMENTS = (
+    ("least-used", PLACE_LEAST_USED),
+    ("random", PLACE_RANDOM),
+    ("round-robin", PLACE_ROUND_ROBIN),
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenarios", nargs="+",
+                    default=["paper-fabric", "fat-tree", "leaf-spine",
+                             "canonical-tree"],
+                    help=f"registered scenarios ({', '.join(list_scenarios())})")
+    ap.add_argument("--placements", type=int, default=2,
+                    help="number of placement policies (1..3)")
+    ap.add_argument("--seeds", type=int, default=1,
+                    help="workload seeds per scenario")
+    ap.add_argument("--concurrency", type=int, default=2)
+    args = ap.parse_args()
+
+    t0 = time.time()
+    scens = [(f"{name}/s{seed}" if args.seeds > 1 else name,
+              get_scenario(name, seed=seed).build())
+             for name in args.scenarios for seed in range(args.seeds)]
+    t_build = time.time() - t0
+
+    pols = [(pn, PolicyConfig(placement=pid, job_concurrency=args.concurrency))
+            for pn, pid in PLACEMENTS[: max(1, args.placements)]]
+
+    t0 = time.time()
+    res = sweep_grid(scens, pols)
+    jax.block_until_ready(res.states.time)
+    t_run = time.time() - t0
+
+    n = len(scens) * len(pols)
+    print(f"{n} simulations ({len(scens)} scenarios x {len(pols)} placements) "
+          f"in one vmapped batch: setup {t_build:.1f}s, run {t_run:.1f}s "
+          f"({n / t_run:.1f} sims/s)")
+    print(f"padded shape: {res.meta['n_nodes']} nodes, "
+          f"{res.meta['n_links']} links, {res.meta['n_vms']} VMs")
+    hdr = (f"{'scenario':24} {'placement':11} {'completion(s)':>13} "
+           f"{'transmit(s)':>11} {'energy(kWh)':>11} {'makespan(s)':>11}")
+    print(hdr)
+    print("-" * len(hdr))
+    for row in res.rows():
+        flag = "  STALLED" if row["stalled"] else ""
+        print(f"{row['scenario']:24} {row['policy']:11} "
+              f"{row['mean_completion_s']:13.1f} "
+              f"{row['mean_transmission_s']:11.1f} "
+              f"{row['energy_kwh']:11.3f} {row['makespan_s']:11.1f}{flag}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,7 @@
 """BigDataSDNSim core: vectorized DES of MapReduce x SDN x cloud (the paper)."""
 from .energy import EnergyParams
-from .engine import SimState, make_simulator, simulate, simulate_batch
+from .engine import (SimState, make_packed_simulator, make_simulator,
+                     simulate, simulate_batch, simulate_scenarios)
 from .mapreduce import ClusterSpec, JobSpec, SimSetup, build_setup
 from .policies import (JOBSEL_FCFS, JOBSEL_PRIORITY, JOBSEL_SJF,
                        PLACE_LEAST_USED, PLACE_RANDOM, PLACE_ROUND_ROBIN,
@@ -8,17 +9,20 @@ from .policies import (JOBSEL_FCFS, JOBSEL_PRIORITY, JOBSEL_SJF,
                        TRAFFIC_WATERFILL, PolicyConfig)
 from .report import energy_report, job_report, summarize
 from .routing import RouteTable, build_route_table
-from .topology import GBPS, Topology, fat_tree, paper_fat_tree, torus_2d, torus_3d
+from .topology import (GBPS, Topology, canonical_tree, fat_tree, leaf_spine,
+                       paper_fat_tree, torus_2d, torus_3d)
 from .usecase import paper_cluster, paper_jobs, paper_setup
 
 __all__ = [
-    "EnergyParams", "SimState", "make_simulator", "simulate", "simulate_batch",
+    "EnergyParams", "SimState", "make_packed_simulator", "make_simulator",
+    "simulate", "simulate_batch", "simulate_scenarios",
     "ClusterSpec", "JobSpec", "SimSetup", "build_setup", "PolicyConfig",
     "ROUTE_LEGACY", "ROUTE_SDN", "TRAFFIC_FAIRSHARE", "TRAFFIC_WATERFILL",
     "PLACE_LEAST_USED", "PLACE_ROUND_ROBIN", "PLACE_RANDOM",
     "JOBSEL_FCFS", "JOBSEL_SJF", "JOBSEL_PRIORITY",
     "energy_report", "job_report", "summarize",
     "RouteTable", "build_route_table",
-    "GBPS", "Topology", "fat_tree", "paper_fat_tree", "torus_2d", "torus_3d",
+    "GBPS", "Topology", "canonical_tree", "fat_tree", "leaf_spine",
+    "paper_fat_tree", "torus_2d", "torus_3d",
     "paper_cluster", "paper_jobs", "paper_setup",
 ]

@@ -33,6 +33,12 @@ from .routing import choose_route, flow_hash_u32
 _INF = jnp.float32(jnp.inf)
 
 
+def job_valid_mask(job_n_out):
+    """A job slot is live iff it expects output packets — the ONE definition
+    of job validity, shared by make_consts and the packed-sweep builder."""
+    return job_n_out > 0
+
+
 class EngineConsts(NamedTuple):
     """Static (replica-shared) tensors, baked from SimSetup."""
 
@@ -70,6 +76,10 @@ class EngineConsts(NamedTuple):
     n_hosts: jnp.ndarray
     n_switches: jnp.ndarray
     storage_node: jnp.ndarray
+    # live VM count — may be < len(vm_host) when consts are padded to a
+    # common shape for a multi-scenario sweep (DESIGN.md §5); placement
+    # must never pick a pad VM slot.
+    n_vms: jnp.ndarray
 
 
 class SimState(NamedTuple):
@@ -119,7 +129,7 @@ def make_consts(setup: SimSetup) -> tuple[EngineConsts, Dict[str, Any]]:
         job_total_mi=jnp.asarray(setup.job_total_mi),
         job_priority=jnp.asarray(setup.job_priority),
         job_n_out=jnp.asarray(setup.job_n_out),
-        job_valid=jnp.asarray(setup.job_n_out > 0),
+        job_valid=jnp.asarray(job_valid_mask(setup.job_n_out)),
         task_job=jnp.asarray(setup.task_job),
         task_kind=jnp.asarray(setup.task_kind),
         task_mi=jnp.asarray(setup.task_mi),
@@ -136,6 +146,7 @@ def make_consts(setup: SimSetup) -> tuple[EngineConsts, Dict[str, Any]]:
         n_hosts=jnp.asarray(cl.topo.n_hosts, jnp.int32),
         n_switches=jnp.asarray(cl.topo.n_switches, jnp.int32),
         storage_node=jnp.asarray(cl.storage_node, jnp.int32),
+        n_vms=jnp.asarray(int(cl.vm_host.shape[0]), jnp.int32),
     )
     meta = {
         "n_nodes": cl.topo.n_nodes,
@@ -150,9 +161,17 @@ def make_consts(setup: SimSetup) -> tuple[EngineConsts, Dict[str, Any]]:
     return consts, meta
 
 
-def init_state(setup: SimSetup) -> SimState:
-    n_j, n_t, n_p = setup.n_jobs, setup.n_tasks, setup.n_packets
-    cl = setup.cluster
+def init_state_from_consts(c: EngineConsts, n_switches: int) -> SimState:
+    """t=0 state derived purely from (possibly padded) const tensors.
+
+    ``n_switches`` is the STATIC switch-tensor length (padded max in a
+    multi-scenario sweep) — it cannot be read off any consts array, every
+    other shape can.  Pad job/task/packet slots start VOID/zero so they are
+    inert for the whole run (DESIGN.md §5).
+    """
+    n_j = c.job_release.shape[0]
+    n_t = c.task_job.shape[0]
+    n_p = c.pkt_job.shape[0]
     f = jnp.float32
     return SimState(
         time=f(0.0), steps=jnp.int32(0), stalled=jnp.asarray(False),
@@ -161,25 +180,28 @@ def init_state(setup: SimSetup) -> SimState:
         job_admit_t=jnp.full(n_j, jnp.nan, f),
         job_out_done=jnp.zeros(n_j, jnp.int32),
         job_done_t=jnp.full(n_j, jnp.nan, f),
-        task_state=jnp.where(jnp.asarray(setup.task_valid), WAITING, VOID
-                             ).astype(jnp.int32),
-        task_rem=jnp.asarray(setup.task_mi, f),
+        task_state=jnp.where(c.task_valid, WAITING, VOID).astype(jnp.int32),
+        task_rem=c.task_mi.astype(f),
         task_got=jnp.zeros(n_t, jnp.int32),
         task_vm=jnp.full(n_t, -1, jnp.int32),
         task_start=jnp.full(n_t, jnp.nan, f),
         task_finish=jnp.full(n_t, jnp.nan, f),
-        pkt_state=jnp.where(jnp.asarray(setup.pkt_valid), WAITING, VOID
-                            ).astype(jnp.int32),
-        pkt_rem=jnp.asarray(setup.pkt_bits, f),
+        pkt_state=jnp.where(c.pkt_valid, WAITING, VOID).astype(jnp.int32),
+        pkt_rem=c.pkt_bits.astype(f),
         pkt_pair=jnp.full(n_p, -1, jnp.int32),
         pkt_cand=jnp.full(n_p, -1, jnp.int32),
         pkt_start=jnp.full(n_p, jnp.nan, f),
         pkt_finish=jnp.full(n_p, jnp.nan, f),
-        vm_load=jnp.zeros(int(cl.vm_host.shape[0]), jnp.int32),
-        host_energy=jnp.zeros(cl.topo.n_hosts, f),
-        host_busy=jnp.zeros(cl.topo.n_hosts, f),
-        switch_energy=jnp.zeros(cl.topo.n_switches, f),
+        vm_load=jnp.zeros(c.vm_host.shape[0], jnp.int32),
+        host_energy=jnp.zeros(c.host_total_mips.shape[0], f),
+        host_busy=jnp.zeros(c.host_total_mips.shape[0], f),
+        switch_energy=jnp.zeros(n_switches, f),
     )
+
+
+def init_state(setup: SimSetup) -> SimState:
+    consts, meta = make_consts(setup)
+    return init_state_from_consts(consts, meta["n_switches"])
 
 
 # ---------------------------------------------------------------------------
@@ -190,7 +212,10 @@ def init_state(setup: SimSetup) -> SimState:
 def _admit_and_place(c: EngineConsts, meta, pol, s: SimState) -> SimState:
     """Admit released jobs (job-selection policy) while concurrency slots are
     free; place each admitted job's tasks onto VMs (placement policy)."""
-    n_vms = meta["n_vms"]
+    # live VM count (c.n_vms) may be smaller than the padded tensor length
+    # in a packed multi-scenario sweep — pad slots must never win placement.
+    n_vms = c.n_vms
+    vm_slot_live = jnp.arange(meta["n_vms"]) < n_vms
 
     def admit_one(_, s: SimState) -> SimState:
         released = (~s.job_admitted) & c.job_valid & (c.job_release <= s.time)
@@ -213,10 +238,12 @@ def _admit_and_place(c: EngineConsts, meta, pol, s: SimState) -> SimState:
                 vm_load, task_vm, counter = carry
                 is_mine = mine[t]
                 h = flow_hash_u32(jnp.int32(t), j, pol["seed"])
+                masked_load = jnp.where(vm_slot_live, vm_load,
+                                        jnp.iinfo(jnp.int32).max)
                 pick = jnp.where(
                     pol["placement"] == PLACE_ROUND_ROBIN, counter % n_vms,
                     jnp.where(pol["placement"] == PLACE_RANDOM, h % n_vms,
-                              jnp.argmin(vm_load).astype(jnp.int32)))
+                              jnp.argmin(masked_load).astype(jnp.int32)))
                 pick = pick.astype(jnp.int32)
                 vm_load = jnp.where(is_mine, vm_load.at[pick].add(1), vm_load)
                 task_vm = jnp.where(is_mine, task_vm.at[t].set(pick), task_vm)
@@ -361,7 +388,7 @@ def _step(c: EngineConsts, meta, pol, s: SimState) -> SimState:
     host_of_task = c.vm_host[vm_safe]
     mips_used = jnp.zeros_like(c.host_total_mips).at[host_of_task].add(
         jnp.where(t_active, task_rate, 0.0))
-    util = jnp.clip(mips_used / c.host_total_mips, 0.0, 1.0)
+    util = jnp.clip(mips_used / jnp.maximum(c.host_total_mips, 1e-9), 0.0, 1.0)
     host_energy = s.host_energy + host_power(util, meta["energy"]) * dt
     host_busy = s.host_busy + jnp.where(util > 0, dt, 0.0)
     ch = fairshare.channel_counts(links, p_active, meta["n_links"])
@@ -414,12 +441,18 @@ def _step(c: EngineConsts, meta, pol, s: SimState) -> SimState:
 # ---------------------------------------------------------------------------
 
 
-def make_simulator(setup: SimSetup):
-    """Returns a jit-able ``run(policy_dict) -> SimState`` closure."""
-    consts, meta = make_consts(setup)
-    s0 = init_state(setup)
+def make_packed_simulator(meta):
+    """Returns ``run(consts, policy_dict) -> SimState`` with consts as an
+    ARGUMENT, so a heterogeneous-scenario sweep can vmap over consts and
+    policies together (see ``repro.scenarios.sweep``, DESIGN.md §5).
 
-    def run(pol: Dict[str, jnp.ndarray]) -> SimState:
+    ``meta`` carries only static shapes + scalar params shared by every
+    replica in the batch (padded maxima for a packed sweep).
+    """
+
+    def run(consts: EngineConsts, pol: Dict[str, jnp.ndarray]) -> SimState:
+        s0 = init_state_from_consts(consts, meta["n_switches"])
+
         def cond(s):
             return ~_finished(consts, meta, s)
 
@@ -434,6 +467,13 @@ def make_simulator(setup: SimSetup):
     return run
 
 
+def make_simulator(setup: SimSetup):
+    """Returns a jit-able ``run(policy_dict) -> SimState`` closure."""
+    consts, meta = make_consts(setup)
+    run = make_packed_simulator(meta)
+    return partial(run, consts)
+
+
 def simulate(setup: SimSetup, policy) -> SimState:
     """Run one replica (policy: PolicyConfig or dict of scalars)."""
     pol = policy.as_arrays() if hasattr(policy, "as_arrays") else policy
@@ -444,3 +484,16 @@ def simulate_batch(setup: SimSetup, pols: Dict[str, jnp.ndarray]) -> SimState:
     """vmap over a policy sweep: every dict value has a leading replica dim."""
     run = make_simulator(setup)
     return jax.jit(jax.vmap(run))(pols)
+
+
+def simulate_scenarios(consts: EngineConsts, meta,
+                       pols: Dict[str, jnp.ndarray]) -> SimState:
+    """ZIPPED batch over packed consts: every consts array and every policy
+    value shares one leading replica dim R, and replica i runs consts[i]
+    under pols[i].  Build consts with ``scenarios.sweep.pack_setups`` (pad
+    heterogeneous setups to a common shape) and replicate/interleave the
+    leading dims yourself; for the full scenario×policy cross product use
+    ``scenarios.sweep.sweep_grid``, which nests the vmaps instead so consts
+    broadcast over the policy axis."""
+    run = make_packed_simulator(meta)
+    return jax.jit(jax.vmap(run))(consts, pols)

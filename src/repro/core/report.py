@@ -26,13 +26,25 @@ def _seg_max(values: jnp.ndarray, seg: jnp.ndarray, mask: jnp.ndarray,
 
 def job_report(setup: SimSetup, s: SimState) -> Dict[str, jnp.ndarray]:
     """Per-job metrics; every array is [N_J] (vmap for batched states)."""
-    n_j = setup.n_jobs
-    pkt_job = jnp.asarray(setup.pkt_job)
-    pkt_phase = jnp.asarray(setup.pkt_phase)
-    task_job = jnp.asarray(setup.task_job)
-    task_kind = jnp.asarray(setup.task_kind)
-    job_release = jnp.asarray(setup.job_release)
+    return job_report_arrays(
+        jnp.asarray(setup.pkt_job), jnp.asarray(setup.pkt_phase),
+        jnp.asarray(setup.task_job), jnp.asarray(setup.task_kind),
+        jnp.asarray(setup.job_release), s)
 
+
+def job_report_consts(consts, s: SimState) -> Dict[str, jnp.ndarray]:
+    """Same metrics from EngineConsts tensors — vmaps over a packed
+    scenario sweep where each replica has its own (padded) job/packet
+    tensors (DESIGN.md §5).  Pad jobs come out NaN; mask with
+    ``consts.job_valid`` before aggregating."""
+    return job_report_arrays(consts.pkt_job, consts.pkt_phase,
+                             consts.task_job, consts.task_kind,
+                             consts.job_release, s)
+
+
+def job_report_arrays(pkt_job, pkt_phase, task_job, task_kind, job_release,
+                      s: SimState) -> Dict[str, jnp.ndarray]:
+    n_j = job_release.shape[0]
     pdur = s.pkt_finish - s.pkt_start
     pdone = s.pkt_state == DONE
     t1 = _seg_max(pdur, pkt_job, pdone & (pkt_phase == PHASE_IN), n_j)

@@ -189,6 +189,81 @@ def fat_tree(k: int, bw: float = GBPS, san_bw: float | None = None) -> Topology:
     return _build(edges, n_hosts, n_sw, 1)
 
 
+def leaf_spine(n_spine: int = 4, n_leaf: int = 4, hosts_per_leaf: int = 4,
+               host_bw: float = GBPS, fabric_bw: float = GBPS,
+               san_bw: float | None = None) -> Topology:
+    """Two-tier leaf-spine (Clos) fabric.
+
+    Every leaf connects to every spine (``fabric_bw``), every host hangs off
+    one leaf (``host_bw``), and the SAN attaches to spine 0.  Any inter-leaf
+    host pair therefore has exactly ``n_spine`` equal-hop routes — the route
+    diversity the SDN controller load-balances over (DESIGN.md §5).
+    """
+    assert n_spine >= 1 and n_leaf >= 1 and hosts_per_leaf >= 1
+    n_hosts = n_leaf * hosts_per_leaf
+    n_sw = n_spine + n_leaf
+    H = lambda i: i
+    SPINE = lambda i: n_hosts + i
+    LEAF = lambda i: n_hosts + n_spine + i
+    SAN = n_hosts + n_sw
+
+    edges: List[Tuple[int, int, float]] = []
+    edges.append((SAN, SPINE(0), san_bw if san_bw is not None else 4 * fabric_bw))
+    for l in range(n_leaf):
+        for s in range(n_spine):
+            edges.append((LEAF(l), SPINE(s), fabric_bw))
+        for h in range(hosts_per_leaf):
+            edges.append((LEAF(l), H(l * hosts_per_leaf + h), host_bw))
+
+    names = tuple(
+        [f"host{i}" for i in range(n_hosts)]
+        + [f"spine{i}" for i in range(n_spine)]
+        + [f"leaf{i}" for i in range(n_leaf)]
+        + ["san0"]
+    )
+    return _build(edges, n_hosts, n_sw, 1, names)
+
+
+def canonical_tree(depth: int = 2, fanout: int = 2, hosts_per_edge: int = 2,
+                   bw: float = GBPS, root_bw_mult: float = 1.0,
+                   san_bw: float | None = None) -> Topology:
+    """Canonical (single-rooted) switch tree, the classic data-center baseline.
+
+    ``depth`` switch levels: level 0 is one root, level d has ``fanout**d``
+    switches; the ``fanout**(depth-1)`` bottom switches are edge switches with
+    ``hosts_per_edge`` hosts each.  The SAN attaches to the root.  Every node
+    pair has exactly ONE route (no path diversity) — the degenerate case
+    against which fat-tree/leaf-spine SDN gains are measured.  Links touching
+    the root carry ``bw * root_bw_mult`` to model thicker trunks.
+    """
+    assert depth >= 1 and fanout >= 1 and hosts_per_edge >= 1
+    level_size = [fanout ** d for d in range(depth)]
+    n_sw = sum(level_size)
+    n_edge = level_size[-1]
+    n_hosts = n_edge * hosts_per_edge
+    level_base = [n_hosts + sum(level_size[:d]) for d in range(depth)]
+    SW = lambda d, i: level_base[d] + i
+    SAN = n_hosts + n_sw
+
+    edges: List[Tuple[int, int, float]] = []
+    edges.append((SAN, SW(0, 0), san_bw if san_bw is not None else 4 * bw))
+    for d in range(1, depth):
+        level_bw = bw * (root_bw_mult if d == 1 else 1.0)
+        for i in range(level_size[d]):
+            edges.append((SW(d - 1, i // fanout), SW(d, i), level_bw))
+    edge_bw = bw * (root_bw_mult if depth == 1 else 1.0)
+    for e in range(n_edge):
+        for h in range(hosts_per_edge):
+            edges.append((SW(depth - 1, e), e * hosts_per_edge + h, edge_bw))
+
+    names = tuple(
+        [f"host{i}" for i in range(n_hosts)]
+        + [f"sw{d}_{i}" for d in range(depth) for i in range(level_size[d])]
+        + ["san0"]
+    )
+    return _build(edges, n_hosts, n_sw, 1, names)
+
+
 def torus_2d(nx: int, ny: int, bw: float = GBPS) -> Topology:
     """2-D torus of `hosts` (TPU-pod ICI abstraction for the roofline advisor).
 

@@ -1,0 +1,13 @@
+"""Scenario & topology library: named topology×workload bundles plus a
+packed multi-topology sweep driver (DESIGN.md §5)."""
+from .registry import (Scenario, get_scenario, list_scenarios, make_cluster,
+                       register)
+from .sweep import (SweepResult, pack_setups, policy_arrays, sweep_grid)
+from .workloads import (JobTemplate, bursty_workload, uniform_workload,
+                        zipf_workload)
+
+__all__ = [
+    "Scenario", "get_scenario", "list_scenarios", "make_cluster", "register",
+    "SweepResult", "pack_setups", "policy_arrays", "sweep_grid",
+    "JobTemplate", "bursty_workload", "uniform_workload", "zipf_workload",
+]

@@ -1,0 +1,146 @@
+"""Scenario registry: named (topology × cluster × workload) bundles
+(DESIGN.md §5).
+
+A ``Scenario`` is host-side configuration only; ``Scenario.build()`` lowers
+it to the fixed-shape ``SimSetup`` tensors the engine consumes.  Register a
+factory with ``@register("name")`` and any sweep driver (or
+``benchmarks/scenario_sweep.py``) can pick it up by name; factories accept
+keyword overrides so one registered scenario covers a parameter family.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Sequence
+
+import numpy as np
+
+from ..core.energy import EnergyParams
+from ..core.mapreduce import ClusterSpec, JobSpec, SimSetup, build_setup
+from ..core.topology import (Topology, canonical_tree, fat_tree, leaf_spine,
+                             paper_fat_tree)
+from ..core.usecase import (HOST_CORES, HOST_MIPS, VM_CORES, VM_CORE_MIPS,
+                            paper_jobs)
+from .workloads import bursty_workload, uniform_workload, zipf_workload
+
+
+def make_cluster(topo: Topology, vms_per_host: int = 1,
+                 vm_cores: int = VM_CORES, vm_core_mips: float = VM_CORE_MIPS,
+                 host_mips: float = HOST_CORES * HOST_MIPS,
+                 energy: EnergyParams = EnergyParams()) -> ClusterSpec:
+    """Paper-Table-2 cluster defaults on an arbitrary topology: VMs spread
+    round-robin over hosts, SAN = the topology's storage node 0."""
+    n_vms = topo.n_hosts * vms_per_host
+    return ClusterSpec(
+        topo=topo,
+        vm_host=(np.arange(n_vms, dtype=np.int32) % topo.n_hosts),
+        vm_total_mips=np.full(n_vms, vm_cores * vm_core_mips, np.float32),
+        vm_core_mips=np.full(n_vms, vm_core_mips, np.float32),
+        host_total_mips=np.full(topo.n_hosts, host_mips, np.float32),
+        storage_node=topo.storage(0),
+        energy=energy,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One named simulation configuration, lowered lazily by ``build()``."""
+
+    name: str
+    topology: Callable[[], Topology]
+    workload: Callable[[], Sequence[JobSpec]]
+    description: str = ""
+    vms_per_host: int = 1
+    split: int = 1
+    k_max: int = 8
+
+    def build(self) -> SimSetup:
+        topo = self.topology()
+        return build_setup(list(self.workload()), make_cluster(
+            topo, vms_per_host=self.vms_per_host),
+            k_max=self.k_max, split=self.split)
+
+
+_REGISTRY: Dict[str, Callable[..., Scenario]] = {}
+
+
+def register(name: str):
+    """Decorator: ``@register("leaf-spine")`` on a ``(**kw) -> Scenario``
+    factory."""
+
+    def deco(fn: Callable[..., Scenario]):
+        if name in _REGISTRY:
+            raise ValueError(f"scenario {name!r} already registered")
+        _REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def get_scenario(name: str, **overrides) -> Scenario:
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown scenario {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name](**overrides)
+
+
+def list_scenarios() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# built-in scenarios
+# ---------------------------------------------------------------------------
+
+
+@register("paper-fabric")
+def _paper_fabric(seed: int = 0, n_each: int = 1, split: int = 2,
+                  k_max: int = 16) -> Scenario:
+    """The paper's §5 Fig.-9 fabric with a Table-3 job mix (``n_each`` of
+    each size class; the paper runs n_each=5).  split=2 and k_max=16 match
+    ``usecase.paper_setup`` — the calibrated paper-reproduction path — so
+    this scenario reports the same numbers as the repro benchmarks."""
+    return Scenario(
+        name="paper-fabric",
+        topology=paper_fat_tree,
+        workload=lambda: paper_jobs(seed=seed, n_each=n_each),
+        description="paper §5 three-tier fabric, Table-3 job mix",
+        split=split,
+        k_max=k_max,
+    )
+
+
+@register("fat-tree")
+def _fat_tree(k: int = 4, seed: int = 0, n_jobs: int = 6) -> Scenario:
+    """k-ary fat-tree with a uniform workload."""
+    return Scenario(
+        name=f"fat-tree-k{k}",
+        topology=lambda: fat_tree(k),
+        workload=lambda: uniform_workload(n_jobs=n_jobs, seed=seed),
+        description=f"{k}-ary fat-tree, uniform job sizes",
+    )
+
+
+@register("leaf-spine")
+def _leaf_spine(n_spine: int = 4, n_leaf: int = 4, hosts_per_leaf: int = 4,
+                seed: int = 0, n_jobs: int = 6) -> Scenario:
+    """Leaf-spine Clos with a heavy-tailed (Zipf) workload."""
+    return Scenario(
+        name=f"leaf-spine-{n_spine}x{n_leaf}",
+        topology=lambda: leaf_spine(n_spine, n_leaf, hosts_per_leaf),
+        workload=lambda: zipf_workload(n_jobs=n_jobs, seed=seed),
+        description=f"{n_spine}-spine/{n_leaf}-leaf Clos, Zipf job sizes",
+    )
+
+
+@register("canonical-tree")
+def _canonical_tree(depth: int = 3, fanout: int = 2, hosts_per_edge: int = 4,
+                    seed: int = 0, n_jobs: int = 6) -> Scenario:
+    """Single-rooted tree (no path diversity) with a bursty workload — the
+    degenerate baseline SDN routing cannot help."""
+    return Scenario(
+        name=f"canonical-tree-d{depth}f{fanout}",
+        topology=lambda: canonical_tree(depth, fanout, hosts_per_edge,
+                                        root_bw_mult=2.0),
+        workload=lambda: bursty_workload(n_jobs=n_jobs, seed=seed),
+        description=f"depth-{depth} canonical tree, bursty arrivals",
+    )

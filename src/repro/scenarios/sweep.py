@@ -1,0 +1,269 @@
+"""Pack heterogeneous scenarios into ONE vmapped tensor program
+(DESIGN.md §5).
+
+Different topologies produce different-shaped ``SimSetup`` tensors (node,
+link, VM, job, task, packet counts all vary).  ``pack_setups`` pads every
+scenario to the batch maxima and RENUMBERS nodes into a common layout
+
+    hosts [0, H) | switches [H, H+SW) | storage [H+SW, H+SW+ST)
+
+(H/SW/ST = padded maxima) so the engine's static host/switch tensor slices
+hold for every replica.  Pad slots are inert by construction:
+
+  * pad links have bw=0 and appear on no route,
+  * pad jobs/tasks/packets carry valid=False (→ VOID at init),
+  * pad VM slots are excluded from placement via ``EngineConsts.n_vms``,
+  * pad hosts/switches idle at 0 W (the energy model zeroes idle devices).
+
+``sweep_grid`` then crosses scenarios × policies and runs the whole grid
+through the engine's packed simulator as a single nested jit(vmap(...))
+call (scenarios outer, policies inner, so consts broadcast over policies).
+
+Caveat: renumbering is outcome-invariant for MapReduce setups (packet
+endpoints are task indices, which pad by appending), but a ``core.flows``
+setup addresses nodes directly via NODE_OFFSET ids, and under
+``ROUTE_LEGACY`` those ids feed the flow hash — renumbering then shifts
+which of the equal-hop routes the legacy policy "randomly" pins, so exact
+times can differ from a single run (same distribution, different draw).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.engine import (EngineConsts, NODE_OFFSET, job_valid_mask,
+                           make_packed_simulator)
+from ..core.mapreduce import SimSetup
+from ..core.policies import PolicyConfig
+from ..core.report import energy_report, job_report_consts
+
+_POLICY_FIELDS = ("routing", "traffic", "placement", "job_selection",
+                  "job_concurrency", "seed")
+
+
+def _pad1(a: np.ndarray, n: int, fill) -> np.ndarray:
+    out = np.full((n,) + a.shape[1:], fill, dtype=a.dtype)
+    out[: a.shape[0]] = a
+    return out
+
+
+def _pack_one(setup: SimSetup, dims: Dict[str, int]) -> Dict[str, np.ndarray]:
+    """One scenario's EngineConsts fields, padded + renumbered to ``dims``."""
+    topo = setup.cluster.topo
+    rt = setup.route_table
+    H, SW = dims["n_hosts"], dims["n_switches"]
+    Nn, L, K, HP = dims["n_nodes"], dims["n_links"], dims["k_max"], dims["max_hops"]
+    n_h, n_sw = topo.n_hosts, topo.n_switches
+
+    def node_map(ids):
+        ids = np.asarray(ids, np.int64)
+        return np.where(
+            ids < n_h, ids,
+            np.where(ids < n_h + n_sw, ids - n_h + H,
+                     ids - (n_h + n_sw) + H + SW)).astype(np.int32)
+
+    def task_ref_map(a):
+        # -1 = SAN, >= NODE_OFFSET = direct node id (needs renumbering),
+        # otherwise a task index (unchanged: tasks pad by appending).
+        a = np.asarray(a, np.int64)
+        return np.where(a >= NODE_OFFSET,
+                        NODE_OFFSET + node_map(a - NODE_OFFSET),
+                        a).astype(np.int32)
+
+    # routes: scatter each (src, dst) pair into the renumbered pair index
+    m_ids = node_map(np.arange(topo.n_nodes))
+    new_pair = (m_ids[:, None].astype(np.int64) * Nn + m_ids[None, :]).reshape(-1)
+    routes = np.full((Nn * Nn, K, HP), -1, np.int32)
+    routes[new_pair, : rt.k_max, : rt.max_hops] = rt.routes
+    n_cand = np.zeros((Nn * Nn,), np.int32)
+    n_cand[new_pair] = rt.n_cand
+
+    cl = setup.cluster
+    return {
+        "routes": routes,
+        "n_cand": n_cand,
+        "link_bw": _pad1(np.asarray(topo.link_bw, np.float32), L, 0.0),
+        "link_src": _pad1(node_map(topo.link_src), L, 0),
+        "link_dst": _pad1(node_map(topo.link_dst), L, 0),
+        "vm_host": _pad1(np.asarray(cl.vm_host, np.int32), dims["n_vms"], 0),
+        "vm_total_mips": _pad1(np.asarray(cl.vm_total_mips, np.float32),
+                               dims["n_vms"], 0.0),
+        "vm_core_mips": _pad1(np.asarray(cl.vm_core_mips, np.float32),
+                              dims["n_vms"], 0.0),
+        # pad hosts get 1 MIPS (not 0) so utilization never divides 0/0;
+        # they run no tasks, so util=0 -> 0 W.
+        "host_total_mips": _pad1(np.asarray(cl.host_total_mips, np.float32),
+                                 H, 1.0),
+        "job_release": _pad1(np.asarray(setup.job_release, np.float32),
+                             dims["n_jobs"], 0.0),
+        "job_total_mi": _pad1(np.asarray(setup.job_total_mi, np.float32),
+                              dims["n_jobs"], 0.0),
+        "job_priority": _pad1(np.asarray(setup.job_priority, np.float32),
+                              dims["n_jobs"], 0.0),
+        "job_n_out": _pad1(np.asarray(setup.job_n_out, np.int32),
+                           dims["n_jobs"], 0),
+        "job_valid": _pad1(np.asarray(job_valid_mask(setup.job_n_out)),
+                           dims["n_jobs"], False),
+        "task_job": _pad1(np.asarray(setup.task_job, np.int32),
+                          dims["n_tasks"], -1),
+        "task_kind": _pad1(np.asarray(setup.task_kind, np.int8),
+                           dims["n_tasks"], 0),
+        "task_mi": _pad1(np.asarray(setup.task_mi, np.float32),
+                         dims["n_tasks"], 0.0),
+        "task_need": _pad1(np.asarray(setup.task_need, np.int32),
+                           dims["n_tasks"], 0),
+        "task_valid": _pad1(np.asarray(setup.task_valid), dims["n_tasks"],
+                            False),
+        "pkt_job": _pad1(np.asarray(setup.pkt_job, np.int32),
+                         dims["n_packets"], -1),
+        "pkt_phase": _pad1(np.asarray(setup.pkt_phase, np.int8),
+                           dims["n_packets"], 0),
+        "pkt_bits": _pad1(np.asarray(setup.pkt_bits, np.float32),
+                          dims["n_packets"], 0.0),
+        "pkt_gate_task": _pad1(np.asarray(setup.pkt_gate_task, np.int32),
+                               dims["n_packets"], -1),
+        "pkt_feeds_task": _pad1(np.asarray(setup.pkt_feeds_task, np.int32),
+                                dims["n_packets"], -1),
+        "pkt_src_task": _pad1(task_ref_map(setup.pkt_src_task),
+                              dims["n_packets"], -1),
+        "pkt_dst_task": _pad1(task_ref_map(setup.pkt_dst_task),
+                              dims["n_packets"], -1),
+        "pkt_valid": _pad1(np.asarray(setup.pkt_valid), dims["n_packets"],
+                           False),
+        "n_hosts": np.int32(n_h),
+        "n_switches": np.int32(n_sw),
+        "storage_node": node_map(cl.storage_node)[()],
+        "n_vms": np.int32(cl.vm_host.shape[0]),
+    }
+
+
+def pack_setups(setups: Sequence[SimSetup]
+                ) -> Tuple[EngineConsts, Dict[str, Any]]:
+    """Pad + stack setups into batched EngineConsts (leading dim = scenario)
+    and the shared static ``meta`` dict for ``make_packed_simulator``."""
+    assert len(setups) >= 1
+    intra = {s.cluster.intra_bw for s in setups}
+    energy = {s.cluster.energy for s in setups}
+    assert len(intra) == 1, "scenarios must share intra_bw (engine scalar)"
+    assert len(energy) == 1, "scenarios must share EnergyParams"
+
+    dims = {
+        "n_hosts": max(s.cluster.topo.n_hosts for s in setups),
+        "n_switches": max(s.cluster.topo.n_switches for s in setups),
+        "n_storage": max(s.cluster.topo.n_storage for s in setups),
+        "n_links": max(s.cluster.topo.n_links for s in setups),
+        "k_max": max(s.route_table.k_max for s in setups),
+        "max_hops": max(s.route_table.max_hops for s in setups),
+        "n_jobs": max(s.n_jobs for s in setups),
+        "n_tasks": max(s.n_tasks for s in setups),
+        "n_packets": max(s.n_packets for s in setups),
+        "n_vms": max(int(s.cluster.vm_host.shape[0]) for s in setups),
+    }
+    dims["n_nodes"] = dims["n_hosts"] + dims["n_switches"] + dims["n_storage"]
+
+    packed = [_pack_one(s, dims) for s in setups]
+    consts = EngineConsts(**{
+        f: jnp.asarray(np.stack([p[f] for p in packed]))
+        for f in EngineConsts._fields})
+    meta = {
+        "n_nodes": dims["n_nodes"],
+        "n_links": dims["n_links"],
+        "n_hosts": dims["n_hosts"],
+        "n_switches": dims["n_switches"],
+        "n_vms": dims["n_vms"],
+        "intra_bw": next(iter(intra)),
+        "energy": next(iter(energy)),
+        "max_steps": max(4 * (s.n_packets + s.n_tasks) + 4 * s.n_jobs + 64
+                         for s in setups),
+    }
+    return consts, meta
+
+
+# ---------------------------------------------------------------------------
+# scenario × policy grid
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Final states of a scenario×policy grid plus labels, replica-major
+    ordering ``r = scenario_index * n_policies + policy_index``.  ``consts``
+    stays un-replicated ([S] leading dim) — replica r's consts are
+    ``consts[r // n_policies]``."""
+
+    states: Any                # SimState, every leaf [S*P, ...]
+    consts: EngineConsts       # packed consts, every leaf [S, ...]
+    meta: Dict[str, Any]
+    scenario_names: List[str]  # [S*P]
+    policy_names: List[str]    # [S*P]
+    n_policies: int
+
+    def rows(self) -> List[Dict[str, Any]]:
+        """Per-replica summary: completion/transmission means over VALID jobs,
+        energy, makespan, stall flag."""
+        P = self.n_policies
+        S = len(self.scenario_names) // P
+        grid = jax.tree_util.tree_map(
+            lambda a: a.reshape((S, P) + a.shape[1:]), self.states)
+        rep = jax.vmap(lambda c, ss: jax.vmap(
+            lambda s: job_report_consts(c, s))(ss))(self.consts, grid)
+        en = jax.vmap(jax.vmap(energy_report))(grid)
+        valid = np.asarray(self.consts.job_valid)  # [S, N_J]
+        out = []
+        def finite_mean(a):
+            # stalled replicas leave NaN for every valid job; return NaN
+            # without numpy's empty-slice warning
+            a = a[np.isfinite(a)]
+            return float(a.mean()) if a.size else float("nan")
+
+        for r in range(len(self.scenario_names)):
+            si, pi = divmod(r, P)
+            v = valid[si]
+            out.append({
+                "scenario": self.scenario_names[r],
+                "policy": self.policy_names[r],
+                "mean_completion_s": finite_mean(
+                    np.asarray(rep["completion_measured"][si, pi])[v]),
+                "mean_transmission_s": finite_mean(
+                    np.asarray(rep["transmission_time"][si, pi])[v]),
+                "energy_kwh": float(en["total_energy_j"][si, pi]) / 3.6e6,
+                "makespan_s": float(en["makespan_s"][si, pi]),
+                "stalled": bool(self.states.stalled[r]),
+            })
+        return out
+
+
+def policy_arrays(policies: Sequence[PolicyConfig]) -> Dict[str, np.ndarray]:
+    """[P]-shaped int32 arrays from a list of PolicyConfig."""
+    return {f: np.asarray([getattr(p, f) for p in policies], np.int32)
+            for f in _POLICY_FIELDS}
+
+
+def sweep_grid(scenarios: Sequence[Tuple[str, SimSetup]],
+               policies: Sequence[Tuple[str, PolicyConfig]]) -> SweepResult:
+    """Run every (scenario, policy) combination as one vmapped batch.
+
+    Nested vmap — scenarios outer, policies inner — so the dense consts
+    tensors (routes is [n_nodes², K, H] per scenario) are broadcast across
+    the policy axis instead of materialized P times."""
+    names = [n for n, _ in scenarios]
+    setups = [s for _, s in scenarios]
+    S, P = len(setups), len(policies)
+    consts, meta = pack_setups(setups)
+    pols = {k: jnp.asarray(v)
+            for k, v in policy_arrays([p for _, p in policies]).items()}
+    run = make_packed_simulator(meta)
+    grid = jax.jit(jax.vmap(lambda c: jax.vmap(lambda p: run(c, p))(pols))
+                   )(consts)  # leaves [S, P, ...]
+    states = jax.tree_util.tree_map(
+        lambda a: a.reshape((S * P,) + a.shape[2:]), grid)
+    return SweepResult(
+        states=states, consts=consts, meta=meta,
+        scenario_names=[n for n in names for _ in range(P)],
+        policy_names=[pn for _ in names for pn, _ in policies],
+        n_policies=P,
+    )

@@ -1,0 +1,38 @@
+"""Docs integrity: README/DESIGN exist and every docstring section
+reference into DESIGN.md resolves (same check CI runs via
+tools/check_design_refs.py)."""
+import importlib.util
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def _load_checker():
+    spec = importlib.util.spec_from_file_location(
+        "check_design_refs", ROOT / "tools" / "check_design_refs.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_docs_exist():
+    assert (ROOT / "DESIGN.md").exists()
+    assert (ROOT / "README.md").exists()
+    readme = (ROOT / "README.md").read_text()
+    # README must point at the tier-1 verify command and DESIGN.md
+    assert "python -m pytest -x -q" in readme
+    assert "DESIGN.md" in readme
+
+
+def test_design_refs_resolve():
+    checker = _load_checker()
+    errors = checker.check(ROOT)
+    assert not errors, "\n".join(errors)
+
+
+def test_design_refs_checker_finds_refs():
+    """The checker must actually see the §2/§3/§5 docstring references —
+    guards against the scan regex silently matching nothing."""
+    checker = _load_checker()
+    tokens = {t for _, _, t in checker.collect_refs(ROOT)}
+    assert {"2", "3", "5", "Beyond-paper"} <= tokens, tokens

@@ -1,6 +1,10 @@
-"""Fair-share bandwidth properties (hypothesis)."""
+"""Fair-share bandwidth properties (hypothesis; skipped when the optional
+dev dependency is absent — see requirements-dev.txt)."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -1,0 +1,73 @@
+#!/usr/bin/env python3
+"""Verify every ``DESIGN.md §<section>`` reference in the source tree
+resolves to a real heading in DESIGN.md (run by CI and tests/test_docs.py).
+
+A reference is any ``DESIGN.md §<token>`` occurrence in a .py file under
+src/, benchmarks/, examples/, tools/ or tests/; a section resolves if some
+markdown heading line in DESIGN.md contains ``§<token>`` not immediately
+followed by more token characters (so §2 does not match a §20 heading).
+Bare ``DESIGN.md`` mentions only require the file to exist.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REF_RE = re.compile(r"DESIGN\.md\s*§([A-Za-z0-9.-]+)")
+SCAN_DIRS = ("src", "benchmarks", "examples", "tools", "tests")
+
+
+def collect_refs(root: Path):
+    """-> list of (file, lineno, section_token)."""
+    refs = []
+    for d in SCAN_DIRS:
+        for py in sorted((root / d).rglob("*.py")):
+            for i, line in enumerate(py.read_text().splitlines(), 1):
+                for m in REF_RE.finditer(line):
+                    refs.append((py.relative_to(root), i,
+                                 m.group(1).rstrip(".")))
+    return refs
+
+
+def heading_sections(design_md: Path):
+    """-> set of §-tokens declared by markdown headings in DESIGN.md."""
+    tokens = set()
+    for line in design_md.read_text().splitlines():
+        if not line.lstrip().startswith("#"):
+            continue
+        for m in re.finditer(r"§([A-Za-z0-9.-]+)", line):
+            tokens.add(m.group(1).rstrip("."))
+    return tokens
+
+
+def check(root: Path) -> list[str]:
+    """-> list of error strings (empty = all references resolve)."""
+    design = root / "DESIGN.md"
+    refs = collect_refs(root)
+    if not design.exists():
+        return [f"DESIGN.md missing but referenced {len(refs)} time(s)"]
+    sections = heading_sections(design)
+    errors = []
+    for f, line, token in refs:
+        if token not in sections:
+            errors.append(f"{f}:{line}: DESIGN.md §{token} has no matching "
+                          f"heading (have: {sorted(sections)})")
+    return errors
+
+
+def main() -> int:
+    root = Path(__file__).resolve().parent.parent
+    errors = check(root)
+    refs = collect_refs(root)
+    if errors:
+        print("\n".join(errors))
+        return 1
+    print(f"ok: {len(refs)} DESIGN.md § reference(s) across "
+          f"{len({f for f, _, _ in refs})} file(s) all resolve "
+          f"({len(heading_sections(root / 'DESIGN.md'))} sections declared)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
