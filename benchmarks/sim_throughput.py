@@ -1,6 +1,10 @@
 """Simulator scaling benchmark (beyond paper): events/sec and the vmapped
 policy-sweep capability the Java original lacks (one scenario per JVM run
-vs thousands of replicas per tensor program here)."""
+vs thousands of replicas per tensor program here).
+
+Runs through the unified ``repro.api`` front door (DESIGN.md §6): the
+compiled-runner cache makes the compile-once / run-many split explicit.
+"""
 from __future__ import annotations
 
 import json
@@ -8,25 +12,25 @@ import time
 from typing import Dict
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.core import (PolicyConfig, ROUTE_LEGACY, ROUTE_SDN, make_simulator,
-                        paper_setup, simulate_batch)
+from repro.api import Experiment, PolicyConfig, runners
+from repro.core import ROUTE_LEGACY, ROUTE_SDN, paper_setup
 from repro.core.engine import make_consts
+from repro.core.policies import as_policy_arrays
 
 
 def single_run_events_per_sec(setup) -> Dict[str, float]:
-    run = jax.jit(make_simulator(setup))
-    pol = PolicyConfig().as_arrays()
+    consts, meta = make_consts(setup)
+    run = runners.get_runner(meta, "single")
+    pol = as_policy_arrays(PolicyConfig())
     t0 = time.perf_counter()
-    s = run(pol)
+    s = run(consts, pol)
     jax.block_until_ready(s.time)
     compile_s = time.perf_counter() - t0
     t0 = time.perf_counter()
     n = 5
     for _ in range(n):
-        s = run(pol)
+        s = run(consts, pol)
         jax.block_until_ready(s.time)
     dt = (time.perf_counter() - t0) / n
     return {"events": int(s.steps), "run_s": dt,
@@ -36,22 +40,16 @@ def single_run_events_per_sec(setup) -> Dict[str, float]:
 def sweep_scaling(setup, widths=(1, 8, 32)) -> Dict[str, Dict]:
     out = {}
     for w in widths:
-        pols = {
-            "routing": jnp.asarray([ROUTE_SDN, ROUTE_LEGACY] * (w // 2)
-                                   or [ROUTE_SDN])[:w],
-            "traffic": jnp.zeros(w, jnp.int32),
-            "placement": jnp.zeros(w, jnp.int32),
-            "job_selection": jnp.zeros(w, jnp.int32),
-            "job_concurrency": jnp.full(w, 2, jnp.int32),
-            "seed": jnp.arange(w, dtype=jnp.int32),
-        }
+        pols = [PolicyConfig(routing=ROUTE_SDN if i % 2 == 0 else ROUTE_LEGACY,
+                             job_concurrency=2, seed=i) for i in range(w)]
+        exp = Experiment(scenarios=setup, policies=pols)
         t0 = time.perf_counter()
-        s = simulate_batch(setup, pols)
-        jax.block_until_ready(s.time)
+        res = exp.run()
+        jax.block_until_ready(res.states.time)
         compile_and_run = time.perf_counter() - t0
         t0 = time.perf_counter()
-        s = simulate_batch(setup, pols)
-        jax.block_until_ready(s.time)
+        res = exp.run()
+        jax.block_until_ready(res.states.time)
         run_s = time.perf_counter() - t0
         out[str(w)] = {"replicas": w, "run_s": run_s,
                        "replicas_per_s": w / run_s,
@@ -70,7 +68,10 @@ def main(quick: bool = False) -> Dict:
         speedup = (base * int(w)) / r["run_s"]
         print(f"  vmap x{w:>3}: {r['run_s'] * 1e3:8.0f} ms "
               f"({speedup:4.1f}x vs sequential singles)")
-    return {"single": single, "sweep": sweep}
+    print(f"  engine traces this process: {runners.trace_count()} "
+          f"(cached runners: {runners.cache_size()})")
+    return {"single": single, "sweep": sweep,
+            "engine_traces": runners.trace_count()}
 
 
 if __name__ == "__main__":

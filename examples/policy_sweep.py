@@ -1,6 +1,7 @@
 """Beyond-paper capability demo: a vmapped policy sweep — hundreds of
 (routing x traffic x placement x job-selection x seed) scenarios as ONE
-tensor program.  The Java original runs one scenario per JVM invocation.
+tensor program via ``repro.api.Experiment`` (DESIGN.md §6).  The Java
+original runs one scenario per JVM invocation.
 
   PYTHONPATH=src python examples/policy_sweep.py --width 64
 """
@@ -9,14 +10,12 @@ import itertools
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.api import Experiment, PolicyConfig
 from repro.core import (JOBSEL_FCFS, JOBSEL_SJF, PLACE_LEAST_USED,
                         PLACE_RANDOM, ROUTE_LEGACY, ROUTE_SDN,
-                        TRAFFIC_FAIRSHARE, TRAFFIC_WATERFILL, paper_setup,
-                        simulate_batch)
-from repro.core.report import energy_report, job_report
+                        TRAFFIC_FAIRSHARE, TRAFFIC_WATERFILL, paper_setup)
 
 
 def main():
@@ -32,23 +31,20 @@ def main():
         (JOBSEL_FCFS, JOBSEL_SJF)))
     reps = max(1, args.width // len(combos))
     rows = [c + (s,) for s in range(reps) for c in combos][:args.width]
-    pols = {
-        "routing": jnp.asarray([r[0] for r in rows], jnp.int32),
-        "traffic": jnp.asarray([r[1] for r in rows], jnp.int32),
-        "placement": jnp.asarray([r[2] for r in rows], jnp.int32),
-        "job_selection": jnp.asarray([r[3] for r in rows], jnp.int32),
-        "job_concurrency": jnp.full(len(rows), 2, jnp.int32),
-        "seed": jnp.asarray([r[4] for r in rows], jnp.int32),
-    }
+    pols = [PolicyConfig(routing=r, traffic=t, placement=p, job_selection=j,
+                         job_concurrency=2, seed=s)
+            for r, t, p, j, s in rows]
+    exp = Experiment(scenarios=setup, policies=pols)
+
     t0 = time.time()
-    states = simulate_batch(setup, pols)
-    jax.block_until_ready(states.time)
+    res = exp.run()
+    jax.block_until_ready(res.states.time)
     dt = time.time() - t0
-    rep = jax.vmap(lambda s: job_report(setup, s))(states)
-    en = jax.vmap(energy_report)(states)
-    mean_ct = np.nanmean(np.asarray(rep["completion_measured"]), axis=1)
-    print(f"{len(rows)} simulations in {dt:.1f}s "
-          f"({len(rows) / dt:.1f} sims/s, one tensor program)")
+    rep = res.job_report()
+    en = res.energy_report()
+    mean_ct = np.nanmean(rep["completion_measured"][0], axis=1)
+    print(f"{len(pols)} simulations in {dt:.1f}s "
+          f"({len(pols) / dt:.1f} sims/s, one tensor program)")
     names = {ROUTE_SDN: "sdn", ROUTE_LEGACY: "legacy"}
     tn = {TRAFFIC_FAIRSHARE: "eq3", TRAFFIC_WATERFILL: "waterfill"}
     pn = {PLACE_LEAST_USED: "least-used", PLACE_RANDOM: "random"}
@@ -60,7 +56,7 @@ def main():
         r = rows[i]
         print(f"{names[r[0]]:8} {tn[r[1]]:10} {pn[r[2]]:11} {jn[r[3]]:5} "
               f"{mean_ct[i]:10.1f} "
-              f"{float(en['total_energy_j'][i]) / 3.6e6:11.2f}")
+              f"{float(en['total_energy_j'][0, i]) / 3.6e6:11.2f}")
 
 
 if __name__ == "__main__":

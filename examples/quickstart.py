@@ -1,20 +1,27 @@
-"""Quickstart: the paper's experiment in ~20 lines + a tiny LM train run.
+"""Quickstart: the paper's experiment through the unified Experiment API
+(DESIGN.md §6) + a tiny LM train run.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import (PolicyConfig, ROUTE_LEGACY, ROUTE_SDN, paper_setup,
-                        simulate, summarize)
+from repro.api import Experiment, PolicyConfig
+from repro.core import ROUTE_LEGACY, ROUTE_SDN
+from repro.scenarios import get_scenario
 
-# --- 1. BigDataSDNSim: SDN vs legacy on the paper's fat-tree (Tables 2-3)
-setup = paper_setup(seed=0)
-for name, routing in (("SDN", ROUTE_SDN), ("legacy", ROUTE_LEGACY)):
-    rep = summarize(setup, simulate(
-        setup, PolicyConfig(routing=routing, job_concurrency=2)))
-    print(f"{name:7s} mean job transmission {np.nanmean(rep['transmission_time']):7.1f} s   "
-          f"completion {np.nanmean(rep['completion_measured']):7.1f} s   "
-          f"energy {rep['total_energy_j'] / 3.6e6:6.2f} kWh")
+# --- 1. BigDataSDNSim: SDN vs legacy on the paper's fat-tree (Tables 2-3).
+# One declarative experiment; .run() compiles once and returns the grid.
+res = Experiment(
+    scenarios=get_scenario("paper-fabric", n_each=5),   # the 15-job mix
+    policies=[("SDN", PolicyConfig(routing=ROUTE_SDN, job_concurrency=2)),
+              ("legacy", PolicyConfig(routing=ROUTE_LEGACY,
+                                      job_concurrency=2))]).run()
+jr = res.job_report()
+for pi, (name, row) in enumerate(zip(res.policy_names, res.rows())):
+    print(f"{name:7s} mean job transmission "
+          f"{np.nanmean(jr['transmission_time'][0, pi]):7.1f} s   "
+          f"completion {row['mean_completion_s']:7.1f} s   "
+          f"energy {row['energy_kwh']:6.2f} kWh")
 
 # --- 2. Train a small LM with the same repo's training stack
 import jax

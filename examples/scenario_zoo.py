@@ -1,16 +1,21 @@
 """Tour of the scenario library: build each registered scenario, print its
 fabric shape and route diversity, then race SDN vs legacy routing on every
-topology in one packed batch (DESIGN.md §5).
+topology in one packed ``repro.api.Experiment`` (DESIGN.md §5, §6).
 
-  PYTHONPATH=src python examples/scenario_zoo.py
+  PYTHONPATH=src python examples/scenario_zoo.py                # all fabrics
+  PYTHONPATH=src python examples/scenario_zoo.py fat-tree leaf-spine
 """
+import sys
+
 import numpy as np
 
+from repro.api import Experiment
 from repro.core import PolicyConfig, ROUTE_LEGACY, ROUTE_SDN
-from repro.scenarios import get_scenario, list_scenarios, sweep_grid
+from repro.scenarios import get_scenario, list_scenarios
 
+names = sys.argv[1:] or list_scenarios()
 scens = []
-for name in list_scenarios():
+for name in names:
     sc = get_scenario(name)
     setup = sc.build()
     topo = setup.cluster.topo
@@ -23,13 +28,14 @@ for name in list_scenarios():
           f"mean {off_diag.mean():.1f}   [{sc.description}]")
     scens.append((sc.name, setup))
 
-pols = [("sdn", PolicyConfig(routing=ROUTE_SDN, job_concurrency=2)),
-        ("legacy", PolicyConfig(routing=ROUTE_LEGACY, job_concurrency=2))]
-res = sweep_grid(scens, pols)
+res = Experiment(
+    scenarios=scens,
+    policies=[("sdn", PolicyConfig(routing=ROUTE_SDN, job_concurrency=2)),
+              ("legacy", PolicyConfig(routing=ROUTE_LEGACY,
+                                      job_concurrency=2))]).run()
 print()
 rows = res.rows()
-for i in range(0, len(rows), 2):
-    sdn, leg = rows[i], rows[i + 1]
+for sdn, leg in zip(rows[::2], rows[1::2]):
     gain = (leg["mean_completion_s"] - sdn["mean_completion_s"]) \
         / leg["mean_completion_s"] * 100
     print(f"{sdn['scenario']:22} completion sdn {sdn['mean_completion_s']:7.1f}s "

@@ -1,0 +1,35 @@
+"""``repro.api`` — the unified experiment front door (DESIGN.md §6).
+
+    from repro.api import Experiment, PolicyConfig, SimMeta
+
+* ``Experiment(scenarios=…, policies=…, seeds=…)`` declares a run grid and
+  ``.run()`` executes it — single run, policy batch, or packed
+  heterogeneous multi-topology sweep — through one dispatch path.
+* ``SimMeta`` is the typed, frozen, hashable static description of a
+  compiled program; it keys the compiled-runner cache (``runners``) so
+  repeated runs with equal meta never retrace.
+* ``Results`` is the one result surface (per-job reports, energy, rows)
+  with pad-job masking built in.
+* Policy axes are declared once in the policy-field registry
+  (``repro.core.policies``); ``PolicyConfig`` and all packing/unpacking
+  derive from it.
+
+The older ``repro.core.simulate``/``simulate_batch``/``simulate_scenarios``
+and ``repro.scenarios.sweep_grid`` entry points remain as thin deprecated
+shims over this module, proven bit-identical by ``tests/test_api.py``.
+"""
+from ..core.policies import (PolicyConfig, PolicyField, as_policy_arrays,
+                             policy_defaults, policy_field_names,
+                             policy_fields, register_policy_field)
+from ..core.simmeta import SimMeta
+from .experiment import Experiment
+from .results import Results
+from . import runners
+from .runners import get_runner
+
+__all__ = [
+    "Experiment", "Results", "SimMeta",
+    "PolicyConfig", "PolicyField", "as_policy_arrays", "policy_defaults",
+    "policy_field_names", "policy_fields", "register_policy_field",
+    "runners", "get_runner",
+]

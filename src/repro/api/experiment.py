@@ -1,0 +1,202 @@
+"""``Experiment`` — the one public front door for running simulations
+(DESIGN.md §6).
+
+The paper's Java tool exposes a single simulation facade with pluggable
+policy classes (Fig. 8); this is our equivalent.  One declarative
+description::
+
+    Experiment(scenarios="paper-fabric",
+               policies=[("sdn", PolicyConfig(routing=ROUTE_SDN)),
+                         ("legacy", PolicyConfig(routing=ROUTE_LEGACY))],
+               seeds=range(3)).run()
+
+covers every execution shape — a single run, a vmapped policy batch on one
+fabric, and a packed heterogeneous multi-topology grid — through one
+dispatch path and the shared compiled-runner cache (``repro.api.runners``),
+returning a ``Results`` grid with pad-job masking built in.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from ..core import policies as policy_mod
+from ..core.engine import make_consts
+from ..core.mapreduce import SimSetup
+from ..core.policies import as_policy_arrays, policy_fields
+from .results import Results
+from . import runners
+
+ScenarioLike = Union[str, SimSetup, Any]         # Any: scenarios.Scenario
+PolicyLike = Union[None, Mapping, Any]           # Any: PolicyConfig
+
+
+def _build_scenario(item: ScenarioLike) -> Tuple[str, SimSetup]:
+    """-> (name, SimSetup) from a registry name, Scenario, or SimSetup."""
+    if isinstance(item, str):
+        from ..scenarios import get_scenario    # local: scenarios uses core
+        sc = get_scenario(item)
+        return sc.name, sc.build()
+    if isinstance(item, SimSetup):
+        return "scenario", item
+    if hasattr(item, "build"):                   # scenarios.Scenario
+        return getattr(item, "name", "scenario"), item.build()
+    raise TypeError(f"cannot interpret {type(item).__name__} as a scenario")
+
+
+def _policy_label(pol) -> str:
+    """Descriptive auto-name: the non-default axes, by their branch names."""
+    arrs = as_policy_arrays(pol)
+    parts = []
+    for f in policy_fields():
+        v = arrs[f.name]
+        if v.ndim or int(v) == f.default:
+            continue
+        parts.append(f.choice_name(int(v)) if f.choices
+                     else f"{f.name}={int(v)}")
+    return "/".join(parts) or "default"
+
+
+def _is_pair(item, *, in_sequence: bool) -> bool:
+    """A ``(name, item)`` pair.  Inside a sequence ANY 2-tuple with a str
+    head is a pair (legit items are never tuples, so ``("mine",
+    "canonical-tree")`` names a registry scenario); at top level a
+    ``(str, str)`` tuple is instead read as a sequence of two items — wrap
+    a name-names-a-name pair in a list to disambiguate."""
+    return (isinstance(item, tuple) and len(item) == 2
+            and isinstance(item[0], str)
+            and (in_sequence or not isinstance(item[1], str)))
+
+
+def _normalize(items, build_one, what: str) -> List[Tuple[str, Any]]:
+    """-> [(name, obj)] from one item, a sequence, or (name, item) pairs."""
+    if items is None:
+        items = [None] if what == "policy" else []
+    elif (_is_pair(items, in_sequence=False)
+          or not isinstance(items, (list, tuple))):
+        items = [items]
+    out = []
+    for item in items:
+        if _is_pair(item, in_sequence=True):
+            name, obj = item[0], build_one(item[1])[1]
+        else:
+            name, obj = build_one(item)
+        out.append((name, obj))
+    if not out:
+        raise ValueError(f"Experiment needs at least one {what}")
+    # disambiguate duplicate auto-names
+    seen: dict = {}
+    named = []
+    for name, obj in out:
+        n = seen.get(name, 0)
+        seen[name] = n + 1
+        named.append((f"{name}#{n}" if n else name, obj))
+    return named
+
+
+class Experiment:
+    """A declarative simulation experiment: scenarios × policies × seeds.
+
+    Parameters
+    ----------
+    scenarios:
+        One or a sequence of: a registered scenario name (``"leaf-spine"``),
+        a ``scenarios.Scenario``, a raw ``SimSetup``, or a ``(name, any of
+        those)`` pair.  (One ambiguity: a TOP-LEVEL ``(str, str)`` tuple is
+        read as two scenario names; wrap it in a list —
+        ``[("mine", "canonical-tree")]`` — to mean a named pair.)  Multiple
+        scenarios are padded + renumbered into one packed batch
+        (DESIGN.md §5).
+    policies:
+        One or a sequence of: a ``PolicyConfig``, a partial mapping of
+        registered policy fields (defaults fill the gaps), or a ``(name,
+        policy)`` pair.  ``None`` runs the registered defaults.
+    seeds:
+        Optional ints; each policy is replicated per seed (its ``seed``
+        field replaced), so ``P = len(policies) * len(seeds)``.
+    """
+
+    def __init__(self, scenarios: Any, policies: Any = None,
+                 seeds: Optional[Sequence[int]] = None):
+        self.scenarios: List[Tuple[str, SimSetup]] = _normalize(
+            scenarios, _build_scenario, "scenario")
+        pols = _normalize(
+            policies, lambda p: (_policy_label(p), p), "policy")
+        if seeds is not None:
+            seeds = list(seeds)
+            if not seeds:
+                raise ValueError("seeds must be non-empty when given")
+            pols = [(f"{name}/s{seed}" if len(seeds) > 1 else name,
+                     _with_seed(pol, seed))
+                    for name, pol in pols for seed in seeds]
+        self.policies: List[Tuple[str, Any]] = pols
+        # the grid is immutable after __init__, so packing/stacking happens
+        # once: repeated .run() calls are pack-free as well as trace-free
+        self._built = None
+        self._pol_arrays = None
+
+    # -- derived views ------------------------------------------------------
+
+    @property
+    def scenario_names(self) -> List[str]:
+        return [n for n, _ in self.scenarios]
+
+    @property
+    def policy_names(self) -> List[str]:
+        return [n for n, _ in self.policies]
+
+    def build(self):
+        """-> (consts, SimMeta): unpacked for one scenario, packed (leading
+        scenario dim) for several.  Memoized — the Experiment is immutable
+        after construction."""
+        if self._built is None:
+            if len(self.scenarios) == 1:
+                self._built = make_consts(self.scenarios[0][1])
+            else:
+                from ..scenarios.sweep import pack_setups
+                self._built = pack_setups([s for _, s in self.scenarios])
+        return self._built
+
+    def policy_arrays(self):
+        """Registry-ordered ``[P]``-shaped policy arrays (memoized)."""
+        if self._pol_arrays is None:
+            stacked = [as_policy_arrays(p) for _, p in self.policies]
+            self._pol_arrays = {k: jnp.stack([s[k] for s in stacked])
+                                for k in stacked[0]}
+        return self._pol_arrays
+
+    # -- execution ----------------------------------------------------------
+
+    def run(self) -> Results:
+        """Execute the whole grid through the cached compiled runner."""
+        S, P = len(self.scenarios), len(self.policies)
+        consts, meta = self.build()
+        pols = self.policy_arrays()
+        if S == 1 and P == 1:
+            pols = jax.tree_util.tree_map(lambda a: a[0], pols)
+            states = runners.get_runner(meta, "single")(consts, pols)
+            expand = lambda a: a[None, None]                  # noqa: E731
+        elif S == 1:
+            states = runners.get_runner(meta, "policy_batch")(consts, pols)
+            expand = lambda a: a[None]                        # noqa: E731
+        else:
+            states = runners.get_runner(meta, "grid")(consts, pols)
+            expand = None
+        if expand is not None:
+            states = jax.tree_util.tree_map(expand, states)
+        if S == 1:   # Results keeps a scenario axis on consts
+            consts = jax.tree_util.tree_map(lambda a: a[None], consts)
+        return Results(states=states, consts=consts, meta=meta,
+                       scenario_names=self.scenario_names,
+                       policy_names=self.policy_names)
+
+
+def _with_seed(pol, seed: int):
+    """A copy of ``pol`` with its ``seed`` policy field replaced."""
+    if pol is None:
+        return policy_mod.PolicyConfig(seed=seed)
+    if isinstance(pol, Mapping):
+        return {**pol, "seed": seed}
+    return pol.replace(seed=seed)

@@ -1,0 +1,124 @@
+"""``Results`` — one result surface for every experiment shape
+(DESIGN.md §6).
+
+Unifies what used to be four disjoint extraction paths (``job_report`` for
+single runs, ``job_report_consts`` for packed batches, ``summarize`` for
+host-side numpy, ``SweepResult.rows`` for grids): states are always held as
+a ``[S, P, ...]`` grid (S scenarios × P policies, both possibly 1) and every
+accessor masks pad jobs via ``consts.job_valid`` before aggregating, so a
+padded heterogeneous batch and a single run read identically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List
+
+import jax
+import numpy as np
+
+from ..core.engine import EngineConsts, SimState
+from ..core.report import energy_report, job_report_arrays
+from ..core.simmeta import SimMeta
+
+
+def _finite_mean(a: np.ndarray) -> float:
+    """Mean over finite entries; NaN when none (e.g. a stalled replica)."""
+    a = a[np.isfinite(a)]
+    return float(a.mean()) if a.size else float("nan")
+
+
+@dataclasses.dataclass
+class Results:
+    """Final states of an ``Experiment`` run.
+
+    ``states`` leaves are ``[S, P, ...]``; ``consts`` leaves keep the
+    scenario axis only (``[S, ...]``) — policy replicas share them.
+    """
+
+    states: SimState           # leaves [S, P, ...]
+    consts: EngineConsts       # leaves [S, ...]
+    meta: SimMeta
+    scenario_names: List[str]  # [S]
+    policy_names: List[str]    # [P]
+    # report caches — states are final, so each grid report computes once
+    _jr: dict = dataclasses.field(default=None, repr=False, compare=False)
+    _er: dict = dataclasses.field(default=None, repr=False, compare=False)
+
+    @property
+    def n_scenarios(self) -> int:
+        return len(self.scenario_names)
+
+    @property
+    def n_policies(self) -> int:
+        return len(self.policy_names)
+
+    def __len__(self) -> int:
+        return self.n_scenarios * self.n_policies
+
+    # -- raw state access ---------------------------------------------------
+
+    def state(self, scenario: int = 0, policy: int = 0) -> SimState:
+        """The unbatched final SimState of one (scenario, policy) cell."""
+        return jax.tree_util.tree_map(
+            lambda a: a[scenario, policy], self.states)
+
+    # -- reports (pad-job masking built in) ----------------------------------
+
+    def job_report(self) -> Dict[str, np.ndarray]:
+        """Per-job metrics (paper Eqs. 6–9), every array ``[S, P, N_J]``.
+
+        Pad jobs of a packed heterogeneous batch are NaN — aggregate with
+        nan-aware reductions and the numbers match the unpadded runs."""
+        if self._jr is None:
+            c = self.consts
+            rep = jax.vmap(lambda ci, row: jax.vmap(
+                lambda s: job_report_arrays(ci.pkt_job, ci.pkt_phase,
+                                            ci.task_job, ci.task_kind,
+                                            ci.job_release, s))(row)
+            )(c, self.states)
+            valid = np.asarray(c.job_valid)[:, None, :]   # [S, 1, N_J]
+            self._jr = {k: np.where(valid, np.asarray(v), np.nan)
+                        for k, v in rep.items()}
+        return self._jr
+
+    def energy_report(self) -> Dict[str, np.ndarray]:
+        """Energy + makespan, every array ``[S, P]``."""
+        if self._er is None:
+            rep = jax.vmap(jax.vmap(energy_report))(self.states)
+            self._er = {k: np.asarray(v) for k, v in rep.items()}
+        return self._er
+
+    def summary(self, scenario: int = 0, policy: int = 0
+                ) -> Dict[str, np.ndarray]:
+        """One cell's full report as numpy (the old ``summarize`` shape)."""
+        jr = {k: v[scenario, policy] for k, v in self.job_report().items()}
+        er = {k: v[scenario, policy] for k, v in self.energy_report().items()}
+        s = self.state(scenario, policy)
+        return {**jr, **er,
+                "stalled": np.asarray(s.stalled),
+                "steps": np.asarray(s.steps)}
+
+    def rows(self) -> List[Dict[str, Any]]:
+        """Per-cell scalar summary, scenario-major (the old
+        ``SweepResult.rows`` shape): valid-job completion/transmission
+        means, energy, makespan, stall flag."""
+        jr = self.job_report()
+        er = self.energy_report()
+        stalled = np.asarray(self.states.stalled)
+        steps = np.asarray(self.states.steps)
+        out = []
+        for si, sn in enumerate(self.scenario_names):
+            for pi, pn in enumerate(self.policy_names):
+                out.append({
+                    "scenario": sn,
+                    "policy": pn,
+                    "mean_completion_s": _finite_mean(
+                        jr["completion_measured"][si, pi]),
+                    "mean_transmission_s": _finite_mean(
+                        jr["transmission_time"][si, pi]),
+                    "energy_kwh": float(er["total_energy_j"][si, pi]) / 3.6e6,
+                    "makespan_s": float(er["makespan_s"][si, pi]),
+                    "stalled": bool(stalled[si, pi]),
+                    "steps": int(steps[si, pi]),
+                })
+        return out

@@ -1,0 +1,104 @@
+"""Compiled-runner cache: one traced engine program per (SimMeta, batch
+shape), shared by every entry point (DESIGN.md §6).
+
+``simulate`` used to rebuild ``jax.jit(make_simulator(setup))`` on every
+call, throwing the trace away each time.  Here the jitted callable is cached
+under the run's hashable ``SimMeta`` plus the batch kind, so a second run
+with an equal meta (and equal tensor shapes — jax.jit keys on those) reuses
+the compiled program with ZERO retraces.  ``trace_count()`` exposes the
+number of engine traces for tests/benchmarks to assert exactly that.
+
+Batch kinds (all funnel into ``make_packed_simulator``'s ``run(consts,
+pol)``):
+
+==============  =============================  ==========================
+kind            consts                         policies
+==============  =============================  ==========================
+"single"        unbatched                      unbatched dict
+"policy_batch"  unbatched (broadcast)          leading policy dim [P]
+"zipped"        leading replica dim [R]        leading replica dim [R]
+"grid"          leading scenario dim [S]       leading policy dim [P]
+==============  =============================  ==========================
+
+"grid" nests the vmaps (scenarios outer, policies inner) so the dense
+consts tensors broadcast across the policy axis instead of being
+materialized P times (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Callable, Tuple
+
+import jax
+
+from ..core.engine import make_packed_simulator
+from ..core.simmeta import SimMeta
+
+KINDS = ("single", "policy_batch", "zipped", "grid")
+
+# LRU-bounded: each entry retains a jitted callable plus its compiled XLA
+# executables, and callers like roofline/advisor produce a fresh SimMeta per
+# candidate schedule — without eviction a long-running process would leak
+# one executable per shape ever seen.
+CACHE_MAX = 64
+_CACHE: OrderedDict[Tuple[SimMeta, str], Callable] = OrderedDict()
+_TRACE_COUNT = 0
+
+
+def trace_count() -> int:
+    """Total engine traces since import (or the last ``cache_clear``)."""
+    return _TRACE_COUNT
+
+
+def cache_size() -> int:
+    return len(_CACHE)
+
+
+def cache_clear() -> None:
+    """Drop all cached runners and reset the trace counter (tests)."""
+    global _TRACE_COUNT
+    _CACHE.clear()
+    _TRACE_COUNT = 0
+
+
+def get_runner(meta: SimMeta, kind: str) -> Callable:
+    """The cached jitted ``run(consts, pols) -> SimState`` for this meta.
+
+    The returned callable is a ``jax.jit`` wrapper: calling it with tensor
+    shapes it has already seen is trace-free; new shapes (e.g. a different
+    job count under the same meta) trace once and are cached by jit itself.
+    """
+    meta = SimMeta.coerce(meta)
+    if kind not in KINDS:
+        raise ValueError(f"unknown runner kind {kind!r}; one of {KINDS}")
+    key = (meta, kind)
+    if key not in _CACHE:
+        _CACHE[key] = _build(meta, kind)
+        while len(_CACHE) > CACHE_MAX:
+            _CACHE.popitem(last=False)
+    _CACHE.move_to_end(key)
+    return _CACHE[key]
+
+
+def _build(meta: SimMeta, kind: str) -> Callable:
+    base = make_packed_simulator(meta)
+
+    def counted(consts, pol):
+        # executes at TRACE time only — the compiled program has no trace
+        # of it, so the counter counts traces, not runs.
+        global _TRACE_COUNT
+        _TRACE_COUNT += 1
+        return base(consts, pol)
+
+    if kind == "single":
+        fn = counted
+    elif kind == "policy_batch":
+        fn = jax.vmap(counted, in_axes=(None, 0))
+    elif kind == "zipped":
+        fn = jax.vmap(counted)
+    else:  # grid: scenarios outer, policies inner
+        def fn(consts, pols):
+            return jax.vmap(
+                lambda c: jax.vmap(lambda p: counted(c, p))(pols))(consts)
+
+    return jax.jit(fn)

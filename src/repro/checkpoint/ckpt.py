@@ -12,7 +12,6 @@ transparently.
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import shutil

@@ -6,8 +6,11 @@ from .mapreduce import ClusterSpec, JobSpec, SimSetup, build_setup
 from .policies import (JOBSEL_FCFS, JOBSEL_PRIORITY, JOBSEL_SJF,
                        PLACE_LEAST_USED, PLACE_RANDOM, PLACE_ROUND_ROBIN,
                        ROUTE_LEGACY, ROUTE_SDN, TRAFFIC_FAIRSHARE,
-                       TRAFFIC_WATERFILL, PolicyConfig)
+                       TRAFFIC_WATERFILL, PolicyConfig, PolicyField,
+                       as_policy_arrays, policy_field_names, policy_fields,
+                       register_policy_field)
 from .report import energy_report, job_report, summarize
+from .simmeta import SimMeta
 from .routing import RouteTable, build_route_table
 from .topology import (GBPS, Topology, canonical_tree, fat_tree, leaf_spine,
                        paper_fat_tree, torus_2d, torus_3d)
@@ -17,6 +20,8 @@ __all__ = [
     "EnergyParams", "SimState", "make_packed_simulator", "make_simulator",
     "simulate", "simulate_batch", "simulate_scenarios",
     "ClusterSpec", "JobSpec", "SimSetup", "build_setup", "PolicyConfig",
+    "PolicyField", "SimMeta", "as_policy_arrays", "policy_field_names",
+    "policy_fields", "register_policy_field",
     "ROUTE_LEGACY", "ROUTE_SDN", "TRAFFIC_FAIRSHARE", "TRAFFIC_WATERFILL",
     "PLACE_LEAST_USED", "PLACE_ROUND_ROBIN", "PLACE_RANDOM",
     "JOBSEL_FCFS", "JOBSEL_SJF", "JOBSEL_PRIORITY",

@@ -11,24 +11,27 @@ One while-loop iteration = one event:
 
 Everything is vmap-safe: ``simulate_batch`` sweeps policy/seed vectors as one
 tensor program (the beyond-paper capability — see DESIGN.md §2).
+
+The static side of a run is described by a typed, hashable ``SimMeta``
+(DESIGN.md §6); ``simulate``/``simulate_batch``/``simulate_scenarios`` are
+kept as thin deprecated shims over the unified ``repro.api`` front door
+(``Experiment`` + the compiled-runner cache).
 """
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
-from typing import Any, Dict, NamedTuple
+from typing import Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from . import fairshare
-from .mapreduce import (ACTIVE, DONE, KIND_MAP, KIND_REDUCE, SimSetup, VOID,
-                        WAITING)
+from .mapreduce import ACTIVE, DONE, SimSetup, VOID, WAITING
 from .energy import host_power, switch_power
-from .policies import (JOBSEL_FCFS, JOBSEL_PRIORITY, JOBSEL_SJF,
-                       PLACE_LEAST_USED, PLACE_RANDOM, PLACE_ROUND_ROBIN)
+from .policies import (JOBSEL_PRIORITY, JOBSEL_SJF, PLACE_RANDOM,
+                       PLACE_ROUND_ROBIN, as_policy_arrays)
 from .routing import choose_route, flow_hash_u32
+from .simmeta import SimMeta
 
 _INF = jnp.float32(jnp.inf)
 
@@ -113,7 +116,7 @@ class SimState(NamedTuple):
     switch_energy: jnp.ndarray
 
 
-def make_consts(setup: SimSetup) -> tuple[EngineConsts, Dict[str, Any]]:
+def make_consts(setup: SimSetup) -> tuple[EngineConsts, SimMeta]:
     rt, cl = setup.route_table, setup.cluster
     consts = EngineConsts(
         routes=jnp.asarray(rt.routes),
@@ -148,16 +151,16 @@ def make_consts(setup: SimSetup) -> tuple[EngineConsts, Dict[str, Any]]:
         storage_node=jnp.asarray(cl.storage_node, jnp.int32),
         n_vms=jnp.asarray(int(cl.vm_host.shape[0]), jnp.int32),
     )
-    meta = {
-        "n_nodes": cl.topo.n_nodes,
-        "n_links": cl.topo.n_links,
-        "n_hosts": cl.topo.n_hosts,
-        "n_switches": cl.topo.n_switches,
-        "n_vms": int(cl.vm_host.shape[0]),
-        "intra_bw": cl.intra_bw,
-        "energy": cl.energy,
-        "max_steps": 4 * (setup.n_packets + setup.n_tasks) + 4 * setup.n_jobs + 64,
-    }
+    meta = SimMeta(
+        n_nodes=cl.topo.n_nodes,
+        n_links=cl.topo.n_links,
+        n_hosts=cl.topo.n_hosts,
+        n_switches=cl.topo.n_switches,
+        n_vms=int(cl.vm_host.shape[0]),
+        intra_bw=cl.intra_bw,
+        energy=cl.energy,
+        max_steps=4 * (setup.n_packets + setup.n_tasks) + 4 * setup.n_jobs + 64,
+    )
     return consts, meta
 
 
@@ -201,7 +204,7 @@ def init_state_from_consts(c: EngineConsts, n_switches: int) -> SimState:
 
 def init_state(setup: SimSetup) -> SimState:
     consts, meta = make_consts(setup)
-    return init_state_from_consts(consts, meta["n_switches"])
+    return init_state_from_consts(consts, meta.n_switches)
 
 
 # ---------------------------------------------------------------------------
@@ -215,7 +218,7 @@ def _admit_and_place(c: EngineConsts, meta, pol, s: SimState) -> SimState:
     # live VM count (c.n_vms) may be smaller than the padded tensor length
     # in a packed multi-scenario sweep — pad slots must never win placement.
     n_vms = c.n_vms
-    vm_slot_live = jnp.arange(meta["n_vms"]) < n_vms
+    vm_slot_live = jnp.arange(meta.n_vms) < n_vms
 
     def admit_one(_, s: SimState) -> SimState:
         released = (~s.job_admitted) & c.job_valid & (c.job_release <= s.time)
@@ -308,7 +311,7 @@ def _activate(c: EngineConsts, meta, pol, s: SimState) -> SimState:
     admitted = s.job_admitted[jnp.maximum(c.pkt_job, 0)]
     p_ready = (s.pkt_state == WAITING) & admitted & gate_ok & c.pkt_valid
     src_node, dst_node = _pkt_endpoints(c, s)
-    n_nodes = meta["n_nodes"]
+    n_nodes = meta.n_nodes
     # unreachable pairs (no candidate route, different nodes) never
     # activate -> the engine reports a stall instead of free transfer
     pair_all = (src_node * n_nodes + dst_node).astype(jnp.int32)
@@ -317,7 +320,7 @@ def _activate(c: EngineConsts, meta, pol, s: SimState) -> SimState:
 
     ch0 = fairshare.channel_counts(
         _route_links(c, s, s.pkt_state == ACTIVE), s.pkt_state == ACTIVE,
-        meta["n_links"])
+        meta.n_links)
 
     def act_one(i, carry):
         pkt_state, pkt_pair, pkt_cand, pkt_start, ch = carry
@@ -352,7 +355,7 @@ def _rates(c: EngineConsts, meta, pol, s: SimState):
     p_active = s.pkt_state == ACTIVE
     links = _route_links(c, s, p_active)
     pkt_rate = fairshare.rates(pol["traffic"], links, p_active, c.link_bw,
-                               meta["intra_bw"])
+                               meta.intra_bw)
     t_active = s.task_state == ACTIVE
     vm = jnp.maximum(s.task_vm, 0)
     n_on_vm = jnp.zeros_like(c.vm_total_mips, jnp.int32).at[vm].add(
@@ -364,7 +367,7 @@ def _rates(c: EngineConsts, meta, pol, s: SimState):
 
 def _finished(c: EngineConsts, meta, s: SimState) -> jnp.ndarray:
     all_done = jnp.all(~c.job_valid | (s.job_out_done >= c.job_n_out))
-    return all_done | s.stalled | (s.steps >= meta["max_steps"])
+    return all_done | s.stalled | (s.steps >= meta.max_steps)
 
 
 def _step(c: EngineConsts, meta, pol, s: SimState) -> SimState:
@@ -389,16 +392,16 @@ def _step(c: EngineConsts, meta, pol, s: SimState) -> SimState:
     mips_used = jnp.zeros_like(c.host_total_mips).at[host_of_task].add(
         jnp.where(t_active, task_rate, 0.0))
     util = jnp.clip(mips_used / jnp.maximum(c.host_total_mips, 1e-9), 0.0, 1.0)
-    host_energy = s.host_energy + host_power(util, meta["energy"]) * dt
+    host_energy = s.host_energy + host_power(util, meta.energy) * dt
     host_busy = s.host_busy + jnp.where(util > 0, dt, 0.0)
-    ch = fairshare.channel_counts(links, p_active, meta["n_links"])
+    ch = fairshare.channel_counts(links, p_active, meta.n_links)
     live_link = (ch > 0).astype(jnp.int32)
-    node_ports = jnp.zeros(meta["n_nodes"], jnp.int32)
+    node_ports = jnp.zeros(meta.n_nodes, jnp.int32)
     node_ports = node_ports.at[c.link_src].add(live_link)
     node_ports = node_ports.at[c.link_dst].add(live_link)
-    sw_ports = jax.lax.dynamic_slice_in_dim(node_ports, meta["n_hosts"],
-                                            meta["n_switches"])
-    switch_energy = s.switch_energy + switch_power(sw_ports, meta["energy"]) * dt
+    sw_ports = jax.lax.dynamic_slice_in_dim(node_ports, meta.n_hosts,
+                                            meta.n_switches)
+    switch_energy = s.switch_energy + switch_power(sw_ports, meta.energy) * dt
 
     # advance
     time = s.time + dt
@@ -446,12 +449,14 @@ def make_packed_simulator(meta):
     ARGUMENT, so a heterogeneous-scenario sweep can vmap over consts and
     policies together (see ``repro.scenarios.sweep``, DESIGN.md §5).
 
-    ``meta`` carries only static shapes + scalar params shared by every
-    replica in the batch (padded maxima for a packed sweep).
+    ``meta`` is a ``SimMeta`` (a legacy meta dict is coerced): only static
+    shapes + scalar params shared by every replica in the batch (padded
+    maxima for a packed sweep).
     """
+    meta = SimMeta.coerce(meta)
 
     def run(consts: EngineConsts, pol: Dict[str, jnp.ndarray]) -> SimState:
-        s0 = init_state_from_consts(consts, meta["n_switches"])
+        s0 = init_state_from_consts(consts, meta.n_switches)
 
         def cond(s):
             return ~_finished(consts, meta, s)
@@ -474,26 +479,44 @@ def make_simulator(setup: SimSetup):
     return partial(run, consts)
 
 
-def simulate(setup: SimSetup, policy) -> SimState:
-    """Run one replica (policy: PolicyConfig or dict of scalars)."""
-    pol = policy.as_arrays() if hasattr(policy, "as_arrays") else policy
-    return jax.jit(make_simulator(setup))(pol)
+# --- deprecated shims ------------------------------------------------------
+# The unified front door is ``repro.api`` (DESIGN.md §6): ``Experiment``
+# dispatches single / policy-batch / packed-scenario execution through one
+# compiled-runner cache, so repeated calls with an equal ``SimMeta`` reuse
+# the traced program.  These wrappers keep the old spellings working and are
+# proven bit-identical to the Experiment path by tests/test_api.py.
+
+
+def simulate(setup: SimSetup, policy=None) -> SimState:
+    """Deprecated shim: run one replica via the cached runner
+    (policy: PolicyConfig, dict of scalars, or None for defaults).
+    Prefer ``repro.api.Experiment(scenarios=setup, policies=policy).run()``.
+    """
+    from ..api import runners  # local import: api sits above core
+    consts, meta = make_consts(setup)
+    return runners.get_runner(meta, "single")(consts, as_policy_arrays(policy))
 
 
 def simulate_batch(setup: SimSetup, pols: Dict[str, jnp.ndarray]) -> SimState:
-    """vmap over a policy sweep: every dict value has a leading replica dim."""
-    run = make_simulator(setup)
-    return jax.jit(jax.vmap(run))(pols)
+    """Deprecated shim: vmap over a policy sweep — every dict value has a
+    leading replica dim (missing registered fields broadcast their default).
+    Prefer ``repro.api.Experiment``."""
+    from ..api import runners
+    consts, meta = make_consts(setup)
+    pols = as_policy_arrays(pols)
+    width = max((v.shape[0] for v in pols.values() if v.ndim), default=1)
+    pols = {k: v if v.ndim else jnp.broadcast_to(v, (width,))
+            for k, v in pols.items()}
+    return runners.get_runner(meta, "policy_batch")(consts, pols)
 
 
 def simulate_scenarios(consts: EngineConsts, meta,
                        pols: Dict[str, jnp.ndarray]) -> SimState:
-    """ZIPPED batch over packed consts: every consts array and every policy
-    value shares one leading replica dim R, and replica i runs consts[i]
-    under pols[i].  Build consts with ``scenarios.sweep.pack_setups`` (pad
-    heterogeneous setups to a common shape) and replicate/interleave the
-    leading dims yourself; for the full scenario×policy cross product use
-    ``scenarios.sweep.sweep_grid``, which nests the vmaps instead so consts
-    broadcast over the policy axis."""
-    run = make_packed_simulator(meta)
-    return jax.jit(jax.vmap(run))(consts, pols)
+    """Deprecated shim: ZIPPED batch over packed consts — every consts array
+    and every policy value shares one leading replica dim R, and replica i
+    runs consts[i] under pols[i].  Build consts with
+    ``scenarios.sweep.pack_setups``; for the full scenario×policy cross
+    product prefer ``repro.api.Experiment`` (or ``sweep_grid``), which nests
+    the vmaps so consts broadcast over the policy axis."""
+    from ..api import runners
+    return runners.get_runner(SimMeta.coerce(meta), "zipped")(consts, pols)

@@ -1,12 +1,26 @@
-"""Policy plug-points (paper Fig. 8) as enum-selected vectorized branches.
+"""Policy plug-points (paper Fig. 8) as a declarative field registry
+(DESIGN.md §6).
 
-The Java tool exposes abstract classes; we expose integer policy ids so a
-vmapped sweep can mix policies per replica (lax.switch/cond inside the
-engine).  Extending = adding a branch; the engine is policy-agnostic.
+The Java tool exposes abstract policy classes; we expose integer policy ids
+so a vmapped sweep can mix policies per replica (``lax.switch``/``cond``
+inside the engine).  Every policy axis is declared ONCE here as a
+``PolicyField`` (name → dtype/default/engine-branch table); everything else
+derives from the registry:
+
+* ``PolicyConfig`` (the typed per-replica config) reads it at call time —
+  one stable class, never a stale rebuilt binding,
+* ``as_policy_arrays`` packs any config/mapping into the engine's policy
+  dict, filling registered defaults,
+* ``repro.scenarios.sweep`` packs policy batches from it,
+* a regression test asserts the engine consumes exactly these keys.
+
+Adding a policy axis = one ``register_policy_field`` call plus the engine
+branch that reads it.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Any, Dict, Mapping, Optional, Tuple
 
 import jax.numpy as jnp
 
@@ -26,23 +40,148 @@ JOBSEL_SJF = 1         # shortest (total MI) job first
 JOBSEL_PRIORITY = 2    # user-supplied priority value
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
+class PolicyField:
+    """One policy axis: its engine key, dtype, default and branch table."""
+
+    name: str
+    default: int
+    dtype: Any = jnp.int32
+    choices: Optional[Mapping[str, int]] = None  # branch name -> enum value
+    doc: str = ""
+
+    def choice_name(self, value: int) -> str:
+        """Human label for an enum value (falls back to the number)."""
+        for k, v in (self.choices or {}).items():
+            if v == int(value):
+                return k
+        return str(int(value))
+
+
+_REGISTRY: Dict[str, PolicyField] = {}
+
+
+def register_policy_field(name: str, default: int, dtype: Any = jnp.int32,
+                          choices: Optional[Mapping[str, int]] = None,
+                          doc: str = "") -> PolicyField:
+    """Declare a policy axis.  ``PolicyConfig`` reads the registry at call
+    time, so the new axis is immediately a constructor keyword with its
+    registered default — existing instances and import-time bindings stay
+    valid."""
+    if name in _REGISTRY:
+        raise ValueError(f"policy field {name!r} already registered")
+    field = PolicyField(name, default, dtype, choices, doc)
+    _REGISTRY[name] = field
+    return field
+
+
+def policy_fields() -> Tuple[PolicyField, ...]:
+    return tuple(_REGISTRY.values())
+
+
+def policy_field_names() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def policy_defaults() -> Dict[str, int]:
+    return {f.name: f.default for f in _REGISTRY.values()}
+
+
+def as_policy_arrays(policy=None, **overrides) -> Dict[str, jnp.ndarray]:
+    """The engine's policy dict from any spelling of a policy.
+
+    ``policy`` may be a ``PolicyConfig``, any mapping (possibly partial —
+    registered defaults fill the gaps), an object with ``as_arrays()``, or
+    ``None``.  Values may be scalars or vmapped arrays; each is cast to the
+    field's registered dtype.
+    """
+    if hasattr(policy, "as_arrays") and not isinstance(policy, Mapping):
+        src: Mapping[str, Any] = policy.as_arrays()
+    elif policy is None:
+        src = {}
+    elif isinstance(policy, Mapping):
+        src = policy
+    else:
+        raise TypeError(f"cannot interpret {type(policy).__name__} "
+                        "as a policy")
+    merged = {**src, **overrides}
+    unknown = set(merged) - set(_REGISTRY)
+    if unknown:
+        raise KeyError(f"unregistered policy field(s): {sorted(unknown)}; "
+                       f"known: {list(_REGISTRY)}")
+    return {f.name: jnp.asarray(merged.get(f.name, f.default), f.dtype)
+            for f in _REGISTRY.values()}
+
+
 class PolicyConfig:
-    """One replica's policy selection — every field may also be a vmapped array."""
+    """One replica's policy selection — every field may also be a vmapped
+    array.  Fields are the registered policy axes (DESIGN.md §6), read from
+    the registry at call time: one ``register_policy_field`` call makes a
+    new axis a constructor keyword everywhere, with no stale class bindings.
+    """
 
-    routing: int = ROUTE_SDN
-    traffic: int = TRAFFIC_FAIRSHARE
-    placement: int = PLACE_LEAST_USED
-    job_selection: int = JOBSEL_FCFS
-    job_concurrency: int = 1_000_000  # paper use-case: effectively unlimited
-    seed: int = 0
+    def __init__(self, **fields):
+        unknown = set(fields) - set(_REGISTRY)
+        if unknown:
+            raise TypeError(
+                f"unregistered policy field(s): {sorted(unknown)}; "
+                f"known: {list(_REGISTRY)}")
+        for f in _REGISTRY.values():
+            setattr(self, f.name, fields.get(f.name, f.default))
 
-    def as_arrays(self):
-        return {
-            "routing": jnp.asarray(self.routing, jnp.int32),
-            "traffic": jnp.asarray(self.traffic, jnp.int32),
-            "placement": jnp.asarray(self.placement, jnp.int32),
-            "job_selection": jnp.asarray(self.job_selection, jnp.int32),
-            "job_concurrency": jnp.asarray(self.job_concurrency, jnp.int32),
-            "seed": jnp.asarray(self.seed, jnp.int32),
-        }
+    def as_arrays(self) -> Dict[str, jnp.ndarray]:
+        """Engine policy dict — derived from the registry, field by field.
+        Instances created before a late registration fall back to the new
+        field's default."""
+        return {f.name: jnp.asarray(getattr(self, f.name, f.default),
+                                    f.dtype)
+                for f in _REGISTRY.values()}
+
+    def replace(self, **fields) -> "PolicyConfig":
+        """A copy with the given registered fields replaced."""
+        cur = {f.name: getattr(self, f.name, f.default)
+               for f in _REGISTRY.values()}
+        cur.update(fields)
+        return PolicyConfig(**cur)
+
+    def __repr__(self) -> str:
+        body = ", ".join(f"{f.name}={getattr(self, f.name, f.default)!r}"
+                         for f in _REGISTRY.values())
+        return f"PolicyConfig({body})"
+
+    def __eq__(self, other) -> bool:
+        if not isinstance(other, PolicyConfig):
+            return NotImplemented
+        return all(getattr(self, f.name, f.default)
+                   == getattr(other, f.name, f.default)
+                   for f in _REGISTRY.values())
+
+
+# ---------------------------------------------------------------------------
+# the registered policy axes (the ONE declaration site)
+# ---------------------------------------------------------------------------
+
+register_policy_field(
+    "routing", ROUTE_SDN,
+    choices={"legacy": ROUTE_LEGACY, "sdn": ROUTE_SDN},
+    doc="route choice among equal-hop candidates (paper §5.2)")
+register_policy_field(
+    "traffic", TRAFFIC_FAIRSHARE,
+    choices={"fairshare": TRAFFIC_FAIRSHARE, "waterfill": TRAFFIC_WATERFILL},
+    doc="channel bandwidth sharing (paper Eq. 3 / beyond-paper max-min)")
+register_policy_field(
+    "placement", PLACE_LEAST_USED,
+    choices={"least-used": PLACE_LEAST_USED, "round-robin": PLACE_ROUND_ROBIN,
+             "random": PLACE_RANDOM},
+    doc="MapReduce task placement (ApplicationMaster)")
+register_policy_field(
+    "job_selection", JOBSEL_FCFS,
+    choices={"fcfs": JOBSEL_FCFS, "sjf": JOBSEL_SJF,
+             "priority": JOBSEL_PRIORITY},
+    doc="admission order (ResourceManager queue)")
+register_policy_field(
+    "job_concurrency", 1_000_000,  # paper use-case: effectively unlimited
+    doc="max jobs admitted concurrently (ApplicationMaster width)")
+register_policy_field(
+    "seed", 0,
+    doc="per-replica hash seed (random placement / legacy route pins)")

@@ -1,12 +1,13 @@
 """Result extraction (paper §4 'performance results', Eqs. 6-9).
 
 Pure functions over the final SimState so they vmap over policy sweeps.
+``repro.api.Results`` wraps these with the ``[S, P, ...]`` grid layout and
+pad-job masking built in (DESIGN.md §6) — prefer it in new code.
 """
 from __future__ import annotations
 
 from typing import Dict
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

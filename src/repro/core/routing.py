@@ -19,7 +19,6 @@ TPU adaptation (see DESIGN.md §2):
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -85,7 +84,6 @@ def build_route_table(topo: Topology, k_max: int = 8,
     """
     n = topo.n_nodes
     dist = hop_distances_np(topo.hop_matrix())
-    li = topo.link_index()
     # adjacency list of directed links
     out_links: list[list[tuple[int, int]]] = [[] for _ in range(n)]
     for idx, (s, d) in enumerate(zip(topo.link_src, topo.link_dst)):

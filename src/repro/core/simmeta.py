@@ -1,0 +1,55 @@
+"""``SimMeta`` — the typed, frozen, hashable static description of one
+compiled simulation program (DESIGN.md §6).
+
+Everything the engine needs that must be a *Python* value at trace time
+(tensor shapes, scalar physics constants) lives here; everything else is
+data inside ``EngineConsts``/``SimState``.  Because ``SimMeta`` is frozen
+and hashable it can key the compiled-runner cache (``repro.api.runners``)
+and serve as a ``jax.jit`` static argument: two setups with equal
+``SimMeta`` share one traced program.
+
+Replaces the loose ``meta: Dict[str, Any]`` the engine, report and sweep
+layers used to thread around; ``__getitem__`` keeps the old ``meta["..."]``
+spelling working during the migration.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+from .energy import EnergyParams
+
+
+@dataclasses.dataclass(frozen=True)
+class SimMeta:
+    """Static shape + scalar parameters shared by every replica of a run.
+
+    In a packed multi-scenario sweep the shape fields are the padded batch
+    maxima (DESIGN.md §5); per-replica differences are data, never shape.
+    """
+
+    n_nodes: int
+    n_links: int
+    n_hosts: int
+    n_switches: int
+    n_vms: int
+    intra_bw: float
+    energy: EnergyParams
+    max_steps: int
+
+    @classmethod
+    def coerce(cls, meta: "SimMeta" | Mapping[str, Any]) -> "SimMeta":
+        """Accept an already-typed SimMeta or a legacy meta dict."""
+        if isinstance(meta, cls):
+            return meta
+        return cls(**{f.name: meta[f.name] for f in dataclasses.fields(cls)})
+
+    # legacy dict-style access (old code spelled ``meta["n_vms"]``)
+    def __getitem__(self, key: str) -> Any:
+        try:
+            return getattr(self, key)
+        except AttributeError:
+            raise KeyError(key) from None
+
+    def replace(self, **kw) -> "SimMeta":
+        return dataclasses.replace(self, **kw)

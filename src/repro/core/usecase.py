@@ -13,7 +13,7 @@ import numpy as np
 
 from .energy import EnergyParams
 from .mapreduce import ClusterSpec, JobSpec, SimSetup, build_setup
-from .topology import GBPS, paper_fat_tree
+from .topology import paper_fat_tree
 
 # Table 3 rows: (map MI, reduce MI, storage Gb, mappers Gb, reducers Gb, nm, nr)
 TABLE3 = {

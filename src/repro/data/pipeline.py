@@ -16,8 +16,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Iterator, List
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.mapreduce import JobSpec

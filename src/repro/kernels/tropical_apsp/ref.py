@@ -1,7 +1,6 @@
 """Pure-jnp oracle for the min-plus matmul / APSP."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

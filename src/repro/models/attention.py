@@ -7,14 +7,11 @@ validated against ``naive`` (its ref.py re-exports it).
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.sharding.rules import (activation_hint, fsdp_params,
-                                  replicate_hint, shard_hint)
+from repro.sharding.rules import shard_hint
 
 NEG_INF = -1e30
 

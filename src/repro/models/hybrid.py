@@ -11,13 +11,12 @@ cache for the few attention layers — why jamba runs long_500k.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.sharding.rules import (activation_hint, fsdp_params,
-                                  replicate_hint, shard_hint)
+from repro.sharding.rules import activation_hint, fsdp_params, shard_hint
 
 from repro.util import scan as uscan
 
@@ -27,8 +26,7 @@ from .layers import (ModelConfig, Params, apply_rope, attn_init, embed_apply,
                      qkv_project, rmsnorm_apply, rmsnorm_init, stack_params,
                      unembed_apply, unembed_init)
 from .moe import moe_apply, moe_init
-from .ssm import (mamba_apply, mamba_cache_init, mamba_decode_step,
-                  mamba_init)
+from .ssm import mamba_apply, mamba_decode_step, mamba_init
 from .transformer import _positions
 
 

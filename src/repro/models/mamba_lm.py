@@ -11,8 +11,7 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.sharding.rules import (activation_hint, fsdp_params,
-                                  replicate_hint, shard_hint)
+from repro.sharding.rules import activation_hint, fsdp_params
 
 from repro.util import scan as uscan
 

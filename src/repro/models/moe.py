@@ -15,8 +15,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.sharding.rules import (activation_hint, fsdp_params,
-                                  replicate_hint, shard_hint)
+from repro.sharding.rules import shard_hint
 
 from .layers import ModelConfig, Params, _dense_init
 

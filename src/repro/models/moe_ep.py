@@ -17,7 +17,7 @@ caller falls back to the dense path otherwise.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -114,7 +114,6 @@ def _fused_scan(dt, bmat, cmat, xc, a_neg, h0, chunk: int):
     matching the Pallas kernel's VMEM-resident formulation.  Returns
     (y [B,S,Di] f32, h_last [B,Di,N])."""
     bsz, s, di = dt.shape
-    n = bmat.shape[-1]
     nchunk = -(-s // chunk)
     pad = nchunk * chunk - s
 

@@ -13,14 +13,12 @@ Input is either ``tokens`` [B,S] (LM) or ``embeds`` [B,S,D] (+ ``pos3``
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.sharding.rules import (activation_hint, fsdp_params,
-                                  replicate_hint, shard_hint)
+from repro.sharding.rules import activation_hint, fsdp_params, shard_hint
 
 from repro.util import scan as uscan
 
@@ -68,7 +66,6 @@ def lm_init(key, cfg: ModelConfig) -> Params:
 
 
 def _positions(batch: Dict[str, jnp.ndarray], s: int, offset) -> jnp.ndarray:
-    b = (batch.get("tokens") if "tokens" in batch else batch["embeds"]).shape[0]
     return jnp.arange(s)[None, :] + jnp.reshape(jnp.asarray(offset), (-1, 1))
 
 

@@ -11,9 +11,8 @@ cross-validates them on small tori in tests).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import List, Sequence, Tuple
 
-import numpy as np
 
 from repro.core import PolicyConfig, simulate
 from repro.core.flows import Flow, flows_setup

@@ -18,7 +18,7 @@ from typing import Any, Dict, Optional
 import jax
 import numpy as np
 
-from .hlo import CollectiveStats, collective_stats
+from .hlo import collective_stats
 from .hw import HwSpec, V5E
 
 

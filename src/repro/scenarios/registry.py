@@ -6,6 +6,8 @@ it to the fixed-shape ``SimSetup`` tensors the engine consumes.  Register a
 factory with ``@register("name")`` and any sweep driver (or
 ``benchmarks/scenario_sweep.py``) can pick it up by name; factories accept
 keyword overrides so one registered scenario covers a parameter family.
+``repro.api.Experiment`` accepts registered names, ``Scenario`` objects and
+raw ``SimSetup``s interchangeably (DESIGN.md §6).
 """
 from __future__ import annotations
 

@@ -35,14 +35,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.engine import (EngineConsts, NODE_OFFSET, job_valid_mask,
-                           make_packed_simulator)
+from ..core.engine import EngineConsts, NODE_OFFSET, job_valid_mask
 from ..core.mapreduce import SimSetup
-from ..core.policies import PolicyConfig
+from ..core.policies import as_policy_arrays, policy_field_names
 from ..core.report import energy_report, job_report_consts
-
-_POLICY_FIELDS = ("routing", "traffic", "placement", "job_selection",
-                  "job_concurrency", "seed")
+from ..core.simmeta import SimMeta
 
 
 def _pad1(a: np.ndarray, n: int, fill) -> np.ndarray:
@@ -142,9 +139,9 @@ def _pack_one(setup: SimSetup, dims: Dict[str, int]) -> Dict[str, np.ndarray]:
 
 
 def pack_setups(setups: Sequence[SimSetup]
-                ) -> Tuple[EngineConsts, Dict[str, Any]]:
+                ) -> Tuple[EngineConsts, SimMeta]:
     """Pad + stack setups into batched EngineConsts (leading dim = scenario)
-    and the shared static ``meta`` dict for ``make_packed_simulator``."""
+    and the shared static ``SimMeta`` for ``make_packed_simulator``."""
     assert len(setups) >= 1
     intra = {s.cluster.intra_bw for s in setups}
     energy = {s.cluster.energy for s in setups}
@@ -169,17 +166,17 @@ def pack_setups(setups: Sequence[SimSetup]
     consts = EngineConsts(**{
         f: jnp.asarray(np.stack([p[f] for p in packed]))
         for f in EngineConsts._fields})
-    meta = {
-        "n_nodes": dims["n_nodes"],
-        "n_links": dims["n_links"],
-        "n_hosts": dims["n_hosts"],
-        "n_switches": dims["n_switches"],
-        "n_vms": dims["n_vms"],
-        "intra_bw": next(iter(intra)),
-        "energy": next(iter(energy)),
-        "max_steps": max(4 * (s.n_packets + s.n_tasks) + 4 * s.n_jobs + 64
-                         for s in setups),
-    }
+    meta = SimMeta(
+        n_nodes=dims["n_nodes"],
+        n_links=dims["n_links"],
+        n_hosts=dims["n_hosts"],
+        n_switches=dims["n_switches"],
+        n_vms=dims["n_vms"],
+        intra_bw=next(iter(intra)),
+        energy=next(iter(energy)),
+        max_steps=max(4 * (s.n_packets + s.n_tasks) + 4 * s.n_jobs + 64
+                      for s in setups),
+    )
     return consts, meta
 
 
@@ -197,7 +194,7 @@ class SweepResult:
 
     states: Any                # SimState, every leaf [S*P, ...]
     consts: EngineConsts       # packed consts, every leaf [S, ...]
-    meta: Dict[str, Any]
+    meta: SimMeta
     scenario_names: List[str]  # [S*P]
     policy_names: List[str]    # [S*P]
     n_policies: int
@@ -237,33 +234,38 @@ class SweepResult:
         return out
 
 
-def policy_arrays(policies: Sequence[PolicyConfig]) -> Dict[str, np.ndarray]:
-    """[P]-shaped int32 arrays from a list of PolicyConfig."""
-    return {f: np.asarray([getattr(p, f) for p in policies], np.int32)
-            for f in _POLICY_FIELDS}
+def policy_arrays(policies: Sequence[Any]) -> Dict[str, np.ndarray]:
+    """Registry-ordered [P]-shaped arrays from a list of PolicyConfig
+    (or partial mappings — registered defaults fill the gaps)."""
+    stacked = [as_policy_arrays(p) for p in policies]
+    return {name: np.stack([np.asarray(s[name]) for s in stacked])
+            for name in policy_field_names()}
 
 
 def sweep_grid(scenarios: Sequence[Tuple[str, SimSetup]],
-               policies: Sequence[Tuple[str, PolicyConfig]]) -> SweepResult:
-    """Run every (scenario, policy) combination as one vmapped batch.
+               policies: Sequence[Tuple[str, Any]]) -> SweepResult:
+    """Deprecated shim over ``repro.api.Experiment``: run every (scenario,
+    policy) combination as one vmapped batch and adapt the result to the
+    flat replica-major ``SweepResult`` shape.
 
-    Nested vmap — scenarios outer, policies inner — so the dense consts
-    tensors (routes is [n_nodes², K, H] per scenario) are broadcast across
-    the policy axis instead of materialized P times."""
-    names = [n for n, _ in scenarios]
-    setups = [s for _, s in scenarios]
-    S, P = len(setups), len(policies)
-    consts, meta = pack_setups(setups)
-    pols = {k: jnp.asarray(v)
-            for k, v in policy_arrays([p for _, p in policies]).items()}
-    run = make_packed_simulator(meta)
-    grid = jax.jit(jax.vmap(lambda c: jax.vmap(lambda p: run(c, p))(pols))
-                   )(consts)  # leaves [S, P, ...]
+    The Experiment path keeps the nested-vmap structure — scenarios outer,
+    policies inner — so the dense consts tensors (routes is [n_nodes², K, H]
+    per scenario) broadcast across the policy axis instead of being
+    materialized P times."""
+    from ..api import Experiment
+    res = Experiment(scenarios=list(scenarios),
+                     policies=list(policies)).run()
+    S, P = res.n_scenarios, res.n_policies
     states = jax.tree_util.tree_map(
-        lambda a: a.reshape((S * P,) + a.shape[2:]), grid)
+        lambda a: a.reshape((S * P,) + a.shape[2:]), res.states)
+    # label from the caller's own name lists, not res.*_names — Experiment
+    # de-duplicates repeated names (#n suffix) but this shim must preserve
+    # the exact labels it was handed.
+    scenario_names = [n for n, _ in scenarios]
+    policy_names = [pn for pn, _ in policies]
     return SweepResult(
-        states=states, consts=consts, meta=meta,
-        scenario_names=[n for n in names for _ in range(P)],
-        policy_names=[pn for _ in names for pn, _ in policies],
+        states=states, consts=res.consts, meta=res.meta,
+        scenario_names=[n for n in scenario_names for _ in range(P)],
+        policy_names=[pn for _ in scenario_names for pn in policy_names],
         n_policies=P,
     )

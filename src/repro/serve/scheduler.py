@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Callable, Deque, Dict, List, Optional, Tuple
+from typing import Deque, Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -49,7 +49,6 @@ class ServeLoop:
         self.queue: Deque[Request] = deque()
         self.active: Dict[int, dict] = {}          # slot -> request state
         self.free = list(range(slots))
-        cfg = api.cfg
         self.cache = api.init_cache(slots, max_len)
         self._decode = jax.jit(
             lambda p, t, c: api.decode_step(p, t, c))

@@ -7,7 +7,7 @@ it shards trivially under pjit (opt state inherits the param specs).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

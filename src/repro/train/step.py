@@ -7,8 +7,7 @@ dry-run lowers exactly these functions for every (arch x shape) cell.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Callable, Dict, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,7 @@ from repro.core import (PolicyConfig, ROUTE_LEGACY, ROUTE_SDN,
                         TRAFFIC_WATERFILL, paper_setup, simulate,
                         simulate_batch, summarize)
 from repro.core.flows import Flow, flows_setup
-from repro.core.mapreduce import DONE, VOID
+from repro.core.mapreduce import DONE
 from repro.core.topology import torus_2d
 
 

@@ -2,8 +2,7 @@
 import numpy as np
 import pytest
 
-from repro.core.routing import (build_route_table, hop_distances_np,
-                                min_plus_square_np)
+from repro.core.routing import build_route_table, hop_distances_np
 from repro.core.topology import fat_tree, paper_fat_tree, torus_2d
 
 

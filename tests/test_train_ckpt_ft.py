@@ -14,7 +14,7 @@ from repro.ft import FailurePlan, StragglerMonitor, TrainDriver
 from repro.models import get_model
 from repro.train import AdamWConfig, lr_schedule, make_train_step
 from repro.train import init as opt_init
-from repro.train.optim import compress_grads, global_norm
+from repro.train.optim import compress_grads
 
 KEY = jax.random.PRNGKey(0)
 
