@@ -17,6 +17,7 @@ returning a ``Results`` grid with pad-job masking built in.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, List, Mapping, Optional, Sequence, Tuple, Union
 
 import jax
@@ -24,6 +25,7 @@ import jax.numpy as jnp
 
 from ..core import policies as policy_mod
 from ..core.engine import make_consts
+from ..core.failures import FailureSchedule
 from ..core.mapreduce import SimSetup
 from ..core.policies import as_policy_arrays, policy_fields
 from .results import Results
@@ -116,12 +118,23 @@ class Experiment:
     seeds:
         Optional ints; each policy is replicated per seed (its ``seed``
         field replaced), so ``P = len(policies) * len(seeds)``.
+    failures:
+        Optional failure schedules (DESIGN.md §7).  One or a sequence of:
+        a ``FailureSchedule``, a callable ``(SimSetup) -> FailureSchedule``
+        (e.g. ``scenarios.failures.failure_injector`` — lets one spec fit
+        every topology), or a ``(name, either)`` pair.  Each scenario is
+        replicated per schedule, so the scenario axis becomes
+        ``S = len(scenarios) * len(failures)`` — the failure-rate axis of
+        ``benchmarks/failure_sweep.py``.
     """
 
     def __init__(self, scenarios: Any, policies: Any = None,
-                 seeds: Optional[Sequence[int]] = None):
+                 seeds: Optional[Sequence[int]] = None,
+                 failures: Any = None):
         self.scenarios: List[Tuple[str, SimSetup]] = _normalize(
             scenarios, _build_scenario, "scenario")
+        if failures is not None:
+            self.scenarios = _cross_failures(self.scenarios, failures)
         pols = _normalize(
             policies, lambda p: (_policy_label(p), p), "policy")
         if seeds is not None:
@@ -191,6 +204,35 @@ class Experiment:
         return Results(states=states, consts=consts, meta=meta,
                        scenario_names=self.scenario_names,
                        policy_names=self.policy_names)
+
+
+def _cross_failures(scenarios: List[Tuple[str, SimSetup]],
+                    failures: Any) -> List[Tuple[str, SimSetup]]:
+    """Replicate every scenario per failure schedule (names suffixed with
+    the schedule label when there is more than one)."""
+    if isinstance(failures, (FailureSchedule,)) or callable(failures) \
+            or _is_pair(failures, in_sequence=False):
+        failures = [failures]
+    named = []
+    for fi, item in enumerate(failures):
+        if _is_pair(item, in_sequence=True):
+            fname, spec = item
+        else:
+            fname, spec = f"f{fi}", item
+        named.append((fname, spec))
+    out = []
+    for sname, setup in scenarios:
+        for fname, spec in named:
+            sched = spec(setup) if callable(spec) else spec
+            if not isinstance(sched, FailureSchedule):
+                raise TypeError(
+                    f"cannot interpret {type(sched).__name__} as a "
+                    "FailureSchedule")
+            topo = setup.cluster.topo
+            sched.validate(topo.n_hosts, topo.n_links)
+            name = f"{sname}/{fname}" if len(named) > 1 else sname
+            out.append((name, dataclasses.replace(setup, failures=sched)))
+    return out
 
 
 def _with_seed(pol, seed: int):

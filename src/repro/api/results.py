@@ -101,7 +101,9 @@ class Results:
     def rows(self) -> List[Dict[str, Any]]:
         """Per-cell scalar summary, scenario-major (the old
         ``SweepResult.rows`` shape): valid-job completion/transmission
-        means, energy, makespan, stall flag."""
+        means, energy, makespan, stall flag, and the recovery totals
+        (re-executed tasks, rerouted packets, summed downtime —
+        DESIGN.md §7; all zero without a failure schedule)."""
         jr = self.job_report()
         er = self.energy_report()
         stalled = np.asarray(self.states.stalled)
@@ -120,5 +122,11 @@ class Results:
                     "makespan_s": float(er["makespan_s"][si, pi]),
                     "stalled": bool(stalled[si, pi]),
                     "steps": int(steps[si, pi]),
+                    "task_reexecs": int(np.nansum(
+                        jr["task_reexecs"][si, pi])),
+                    "pkt_reroutes": int(np.nansum(
+                        jr["pkt_reroutes"][si, pi])),
+                    "downtime_s": float(np.nansum(
+                        jr["downtime_s"][si, pi])),
                 })
         return out

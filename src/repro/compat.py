@@ -1,0 +1,51 @@
+"""Compatibility shims for the jax API drift between 0.4.x and >=0.5.
+
+The LM stack (launch/dryrun, models/moe_ep, sharding/rules) and its tests
+are written against the current jax surface — ``jax.set_mesh``,
+``jax.shard_map(..., check_vma=...)``, ``jax.sharding.get_abstract_mesh`` —
+while the baked container ships jax 0.4.37, where those spell
+``with mesh:``, ``jax.experimental.shard_map.shard_map(..., check_rep=...)``
+and the thread-resources physical mesh.  Importing this module (done by
+``repro/__init__.py``, so any ``import repro.<x>`` suffices) installs the
+new spellings onto the ``jax`` module when they are missing; on a current
+jax every shim is a no-op.
+
+No behavior is patched on new jax — only absent attributes are added — so
+this cannot mask a real regression there.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _install() -> None:
+    if not hasattr(jax, "set_mesh"):
+        # jax<=0.4: a Mesh is itself a context manager (it enters the
+        # thread-resources env, the ambient-mesh mechanism of that era),
+        # so the context-manager use ``with jax.set_mesh(m):`` maps to
+        # ``with m:`` directly.
+        jax.set_mesh = lambda mesh: mesh
+
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def shard_map(f, mesh=None, in_specs=None, out_specs=None,
+                      check_vma=None, **kw):
+            if check_vma is not None:          # renamed from check_rep
+                kw["check_rep"] = check_vma
+            return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kw)
+
+        jax.shard_map = shard_map
+
+    if not hasattr(jax.sharding, "get_abstract_mesh"):
+        from jax._src.mesh import thread_resources
+
+        def get_abstract_mesh():
+            m = thread_resources.env.physical_mesh
+            return None if m.empty else m
+
+        jax.sharding.get_abstract_mesh = get_abstract_mesh
+
+
+_install()

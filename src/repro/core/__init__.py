@@ -2,9 +2,11 @@
 from .energy import EnergyParams
 from .engine import (SimState, make_packed_simulator, make_simulator,
                      simulate, simulate_batch, simulate_scenarios)
+from .failures import FailureSchedule, host_crash, link_cut, no_failures
 from .mapreduce import ClusterSpec, JobSpec, SimSetup, build_setup
 from .policies import (JOBSEL_FCFS, JOBSEL_PRIORITY, JOBSEL_SJF,
                        PLACE_LEAST_USED, PLACE_RANDOM, PLACE_ROUND_ROBIN,
+                       RECOVERY_RESTART, RECOVERY_RESUME,
                        ROUTE_LEGACY, ROUTE_SDN, TRAFFIC_FAIRSHARE,
                        TRAFFIC_WATERFILL, PolicyConfig, PolicyField,
                        as_policy_arrays, policy_field_names, policy_fields,
@@ -22,9 +24,11 @@ __all__ = [
     "ClusterSpec", "JobSpec", "SimSetup", "build_setup", "PolicyConfig",
     "PolicyField", "SimMeta", "as_policy_arrays", "policy_field_names",
     "policy_fields", "register_policy_field",
+    "FailureSchedule", "host_crash", "link_cut", "no_failures",
     "ROUTE_LEGACY", "ROUTE_SDN", "TRAFFIC_FAIRSHARE", "TRAFFIC_WATERFILL",
     "PLACE_LEAST_USED", "PLACE_ROUND_ROBIN", "PLACE_RANDOM",
     "JOBSEL_FCFS", "JOBSEL_SJF", "JOBSEL_PRIORITY",
+    "RECOVERY_RESTART", "RECOVERY_RESUME",
     "energy_report", "job_report", "summarize",
     "RouteTable", "build_route_table",
     "GBPS", "Topology", "canonical_tree", "fat_tree", "leaf_spine",

@@ -6,8 +6,10 @@ event time is an analytic ``min`` over fixed-shape state tensors (paper
 Eq. 4 generalized to packet finishes, task finishes and job releases).
 One while-loop iteration = one event:
 
-  admission -> placement -> task activation -> packet activation (routed) ->
-  rates -> dt = earliest horizon -> energy += power*dt -> advance -> completions
+  failure/recovery transitions (DESIGN.md §7, traced only when a schedule
+  has a finite instant) -> admission -> placement -> task activation ->
+  packet activation (routed) -> rates -> dt = earliest horizon ->
+  energy += power*dt -> advance -> completions
 
 Everything is vmap-safe: ``simulate_batch`` sweeps policy/seed vectors as one
 tensor program (the beyond-paper capability — see DESIGN.md §2).
@@ -26,10 +28,11 @@ import jax
 import jax.numpy as jnp
 
 from . import fairshare
+from .failures import no_failures
 from .mapreduce import ACTIVE, DONE, SimSetup, VOID, WAITING
 from .energy import host_power, switch_power
 from .policies import (JOBSEL_PRIORITY, JOBSEL_SJF, PLACE_RANDOM,
-                       PLACE_ROUND_ROBIN, as_policy_arrays)
+                       PLACE_ROUND_ROBIN, RECOVERY_RESTART, as_policy_arrays)
 from .routing import choose_route, flow_hash_u32
 from .simmeta import SimMeta
 
@@ -83,6 +86,13 @@ class EngineConsts(NamedTuple):
     # common shape for a multi-scenario sweep (DESIGN.md §5); placement
     # must never pick a pad VM slot.
     n_vms: jnp.ndarray
+    # failure schedule (DESIGN.md §7): outage window [fail_t, recover_t)
+    # per host / per directed link; inf = never.  Just more piecewise-
+    # constant rate breakpoints for the analytic dt min.
+    host_fail_t: jnp.ndarray     # f32 [n_hosts]
+    host_recover_t: jnp.ndarray  # f32 [n_hosts]
+    link_fail_t: jnp.ndarray     # f32 [n_links]
+    link_recover_t: jnp.ndarray  # f32 [n_links]
 
 
 class SimState(NamedTuple):
@@ -114,10 +124,36 @@ class SimState(NamedTuple):
     host_energy: jnp.ndarray
     host_busy: jnp.ndarray
     switch_energy: jnp.ndarray
+    # failure & recovery (DESIGN.md §7)
+    host_dead: jnp.ndarray      # bool [n_hosts]: inside outage window
+    link_dead: jnp.ndarray      # bool [n_links]
+    task_restarts: jnp.ndarray  # int32 [n_tasks]: YARN re-executions
+    pkt_reroutes: jnp.ndarray   # int32 [n_packets]: failure-driven reverts
+    job_downtime: jnp.ndarray   # f32 [n_jobs]: admitted-but-zero-progress s
+
+
+def default_max_steps(setup: SimSetup) -> int:
+    """Step cap: the no-failure event bound, plus — when a failure schedule
+    is present — one full re-execution budget per fail/recover instant
+    (each failure can revert every in-flight task/packet at most once).
+    The failure-mode cap is quantized to the next power of two so that
+    schedules differing only in outage COUNT share a ``SimMeta`` and hit
+    the compiled-runner cache (DESIGN.md §6)."""
+    base = 4 * (setup.n_packets + setup.n_tasks) + 4 * setup.n_jobs + 64
+    sched = setup.failures
+    if sched is not None and sched.any_failures:
+        exact = base * (1 + sched.n_events) + 2 * sched.n_events
+        return 1 << (exact - 1).bit_length()
+    return base
 
 
 def make_consts(setup: SimSetup) -> tuple[EngineConsts, SimMeta]:
     rt, cl = setup.route_table, setup.cluster
+    sched = setup.failures
+    if sched is None:
+        sched = no_failures(cl.topo.n_hosts, cl.topo.n_links)
+    else:
+        sched.validate(cl.topo.n_hosts, cl.topo.n_links)
     consts = EngineConsts(
         routes=jnp.asarray(rt.routes),
         n_cand=jnp.asarray(rt.n_cand),
@@ -150,6 +186,10 @@ def make_consts(setup: SimSetup) -> tuple[EngineConsts, SimMeta]:
         n_switches=jnp.asarray(cl.topo.n_switches, jnp.int32),
         storage_node=jnp.asarray(cl.storage_node, jnp.int32),
         n_vms=jnp.asarray(int(cl.vm_host.shape[0]), jnp.int32),
+        host_fail_t=jnp.asarray(sched.host_fail_t, jnp.float32),
+        host_recover_t=jnp.asarray(sched.host_recover_t, jnp.float32),
+        link_fail_t=jnp.asarray(sched.link_fail_t, jnp.float32),
+        link_recover_t=jnp.asarray(sched.link_recover_t, jnp.float32),
     )
     meta = SimMeta(
         n_nodes=cl.topo.n_nodes,
@@ -159,7 +199,8 @@ def make_consts(setup: SimSetup) -> tuple[EngineConsts, SimMeta]:
         n_vms=int(cl.vm_host.shape[0]),
         intra_bw=cl.intra_bw,
         energy=cl.energy,
-        max_steps=4 * (setup.n_packets + setup.n_tasks) + 4 * setup.n_jobs + 64,
+        max_steps=default_max_steps(setup),
+        has_failures=sched.any_failures,
     )
     return consts, meta
 
@@ -199,6 +240,11 @@ def init_state_from_consts(c: EngineConsts, n_switches: int) -> SimState:
         host_energy=jnp.zeros(c.host_total_mips.shape[0], f),
         host_busy=jnp.zeros(c.host_total_mips.shape[0], f),
         switch_energy=jnp.zeros(n_switches, f),
+        host_dead=jnp.zeros(c.host_fail_t.shape[0], bool),
+        link_dead=jnp.zeros(c.link_fail_t.shape[0], bool),
+        task_restarts=jnp.zeros(n_t, jnp.int32),
+        pkt_reroutes=jnp.zeros(n_p, jnp.int32),
+        job_downtime=jnp.zeros(n_j, f),
     )
 
 
@@ -212,13 +258,142 @@ def init_state(setup: SimSetup) -> SimState:
 # ---------------------------------------------------------------------------
 
 
+def _effective_link_bw(c: EngineConsts, meta, s: SimState) -> jnp.ndarray:
+    """Per-link capacity with dead links at 0 (DESIGN.md §7).  Without
+    failures this IS ``c.link_bw`` — the no-failure trace is unchanged."""
+    if meta.has_failures:
+        return jnp.where(s.link_dead, 0.0, c.link_bw)
+    return c.link_bw
+
+
+def _apply_failures(c: EngineConsts, pol, s: SimState) -> SimState:
+    """Fire every fail/recover transition whose instant has been reached.
+
+    Failure instants join the dt horizon (``_step``), so ``s.time`` lands
+    exactly on each one; here — at the top of the next iteration — the dead
+    masks are recomputed from the schedule and the DELTA vs the previous
+    masks drives the one-shot transitions (DESIGN.md §7):
+
+      * WAITING/ACTIVE tasks on a newly-dead host revert to WAITING and
+        unplace (``task_vm=-1``) — YARN re-execution on heartbeat loss;
+        under ``recovery=restart`` their progress is lost, under ``resume``
+        (beyond-paper checkpointing) ``task_rem`` survives.
+      * In-flight packets whose chosen route crosses a newly-dead link
+        revert to WAITING for re-routing (bits already delivered survive:
+        the stream resumes on the new route).
+      * In-flight packets whose src/dst HOST newly died revert too — the
+        connection died with the endpoint — and retransmit from scratch
+        under ``restart``.
+
+    DONE work is never reverted (completed outputs are durable — the SAN
+    holds T3 results, map outputs are re-fetchable); recovery instants need
+    no transition, the masks simply clear.
+    """
+    t = s.time
+    host_dead = (c.host_fail_t <= t) & (t < c.host_recover_t)
+    link_dead = (c.link_fail_t <= t) & (t < c.link_recover_t)
+    new_h = host_dead & ~s.host_dead
+    new_l = link_dead & ~s.link_dead
+    restart = pol["recovery"] == RECOVERY_RESTART
+
+    # packets first: endpoints must resolve against the ACTIVATION-time
+    # placement, i.e. before any task unplaces below.
+    n_hosts_pad = c.host_fail_t.shape[0]
+    src_node, dst_node = _pkt_endpoints(c, s)
+    p_active = s.pkt_state == ACTIVE
+    links = _route_links(c, s, p_active)
+    route_hit = p_active & jnp.any(
+        (links >= 0) & new_l[jnp.maximum(links, 0)], axis=-1)
+
+    def _endpoint_died(node):
+        return (node < c.n_hosts) & new_h[jnp.clip(node, 0, n_hosts_pad - 1)]
+
+    ep_hit = p_active & (_endpoint_died(src_node) | _endpoint_died(dst_node))
+    hit_p = route_hit | ep_hit
+    pkt_state = jnp.where(hit_p, WAITING, s.pkt_state)
+    pkt_rem = jnp.where(ep_hit & restart, c.pkt_bits.astype(jnp.float32),
+                        s.pkt_rem)
+    pkt_pair = jnp.where(hit_p, -1, s.pkt_pair)
+    pkt_cand = jnp.where(hit_p, -1, s.pkt_cand)
+    pkt_reroutes = s.pkt_reroutes + hit_p.astype(jnp.int32)
+
+    # tasks on newly-dead hosts
+    vm_safe = jnp.maximum(s.task_vm, 0)
+    task_host = jnp.clip(c.vm_host[vm_safe], 0, n_hosts_pad - 1)
+    hit_t = (c.task_valid & (s.task_vm >= 0) & new_h[task_host]
+             & ((s.task_state == ACTIVE) | (s.task_state == WAITING)))
+    task_state = jnp.where(hit_t, WAITING, s.task_state)
+    task_rem = jnp.where(hit_t & restart, c.task_mi.astype(jnp.float32),
+                         s.task_rem)
+    task_start = jnp.where(hit_t, jnp.nan, s.task_start)
+    vm_load = s.vm_load.at[vm_safe].add(-hit_t.astype(jnp.int32))
+    task_vm = jnp.where(hit_t, -1, s.task_vm)
+    task_restarts = s.task_restarts + hit_t.astype(jnp.int32)
+
+    return s._replace(
+        host_dead=host_dead, link_dead=link_dead,
+        pkt_state=pkt_state, pkt_rem=pkt_rem, pkt_pair=pkt_pair,
+        pkt_cand=pkt_cand, pkt_reroutes=pkt_reroutes,
+        task_state=task_state, task_rem=task_rem, task_start=task_start,
+        task_vm=task_vm, vm_load=vm_load, task_restarts=task_restarts)
+
+
 def _admit_and_place(c: EngineConsts, meta, pol, s: SimState) -> SimState:
     """Admit released jobs (job-selection policy) while concurrency slots are
-    free; place each admitted job's tasks onto VMs (placement policy)."""
+    free; place each admitted job's tasks onto VMs (placement policy).
+
+    With failures enabled, placement only considers VMs on LIVE hosts (the
+    ResourceManager's heartbeat view — DESIGN.md §7) and a second pass
+    re-places unplaced tasks of already-admitted jobs (YARN re-execution
+    after a host loss)."""
     # live VM count (c.n_vms) may be smaller than the padded tensor length
     # in a packed multi-scenario sweep — pad slots must never win placement.
     n_vms = c.n_vms
     vm_slot_live = jnp.arange(meta.n_vms) < n_vms
+    if meta.has_failures:
+        vm_live = vm_slot_live & ~s.host_dead[
+            jnp.clip(c.vm_host, 0, c.host_fail_t.shape[0] - 1)]
+        n_live = jnp.sum(vm_live.astype(jnp.int32))
+        # position of each live VM slot among the live ones, for the
+        # k-th-live remap (identical to `k` itself when nothing is dead,
+        # since pad slots sit at the tail)
+        live_pos = jnp.cumsum(vm_live.astype(jnp.int32)) - 1
+    else:
+        vm_live, n_live, live_pos = vm_slot_live, n_vms, None
+
+    def pick_vm(vm_load, counter, h):
+        masked_load = jnp.where(vm_live, vm_load, jnp.iinfo(jnp.int32).max)
+        if meta.has_failures:
+            def kth_live(k):
+                return jnp.argmax(vm_live & (live_pos == k)).astype(jnp.int32)
+            rr = kth_live(counter % jnp.maximum(n_live, 1))
+            rnd = kth_live(h % jnp.maximum(n_live, 1))
+        else:
+            rr, rnd = counter % n_vms, h % n_vms
+        pick = jnp.where(
+            pol["placement"] == PLACE_ROUND_ROBIN, rr,
+            jnp.where(pol["placement"] == PLACE_RANDOM, rnd,
+                      jnp.argmin(masked_load).astype(jnp.int32)))
+        return pick.astype(jnp.int32)
+
+    def place_mask(s: SimState, mine) -> SimState:
+        """Place every task in ``mine`` (ordered fori: round-robin counter
+        and least-used load must see earlier placements)."""
+        def place_one(t, carry):
+            vm_load, task_vm, counter = carry
+            is_mine = mine[t]
+            h = flow_hash_u32(jnp.int32(t), c.task_job[t], pol["seed"])
+            pick = pick_vm(vm_load, counter, h)
+            vm_load = jnp.where(is_mine, vm_load.at[pick].add(1), vm_load)
+            task_vm = jnp.where(is_mine, task_vm.at[t].set(pick), task_vm)
+            counter = counter + jnp.where(is_mine, 1, 0)
+            return vm_load, task_vm, counter
+
+        vm_load, task_vm, counter = jax.lax.fori_loop(
+            0, s.task_vm.shape[0], place_one,
+            (s.vm_load, s.task_vm, s.place_counter))
+        return s._replace(vm_load=vm_load, task_vm=task_vm,
+                          place_counter=counter)
 
     def admit_one(_, s: SimState) -> SimState:
         released = (~s.job_admitted) & c.job_valid & (c.job_release <= s.time)
@@ -233,38 +408,31 @@ def _admit_and_place(c: EngineConsts, meta, pol, s: SimState) -> SimState:
         key = jnp.where(released, key, _INF)
         j = jnp.argmin(key).astype(jnp.int32)
         do = free & any_wait
+        if meta.has_failures:
+            # no live NodeManager, no admission (the RM has nowhere to
+            # place): the job waits for a host recovery breakpoint
+            do = do & (n_live > 0)
 
         def place(s: SimState) -> SimState:
-            mine = (c.task_job == j) & c.task_valid
-
-            def place_one(t, carry):
-                vm_load, task_vm, counter = carry
-                is_mine = mine[t]
-                h = flow_hash_u32(jnp.int32(t), j, pol["seed"])
-                masked_load = jnp.where(vm_slot_live, vm_load,
-                                        jnp.iinfo(jnp.int32).max)
-                pick = jnp.where(
-                    pol["placement"] == PLACE_ROUND_ROBIN, counter % n_vms,
-                    jnp.where(pol["placement"] == PLACE_RANDOM, h % n_vms,
-                              jnp.argmin(masked_load).astype(jnp.int32)))
-                pick = pick.astype(jnp.int32)
-                vm_load = jnp.where(is_mine, vm_load.at[pick].add(1), vm_load)
-                task_vm = jnp.where(is_mine, task_vm.at[t].set(pick), task_vm)
-                counter = counter + jnp.where(is_mine, 1, 0)
-                return vm_load, task_vm, counter
-
-            vm_load, task_vm, counter = jax.lax.fori_loop(
-                0, task_vm_len, place_one,
-                (s.vm_load, s.task_vm, s.place_counter))
+            s = place_mask(s, (c.task_job == j) & c.task_valid)
             return s._replace(
-                vm_load=vm_load, task_vm=task_vm, place_counter=counter,
                 job_admitted=s.job_admitted.at[j].set(True),
                 job_admit_t=s.job_admit_t.at[j].set(s.time))
 
-        task_vm_len = s.task_vm.shape[0]
         return jax.lax.cond(do, place, lambda s: s, s)
 
-    return jax.lax.fori_loop(0, s.job_admitted.shape[0], admit_one, s)
+    s = jax.lax.fori_loop(0, s.job_admitted.shape[0], admit_one, s)
+
+    if meta.has_failures:
+        # re-place tasks a host failure unplaced (jobs already admitted);
+        # with no live VM they stay unplaced and wait for a recovery.
+        orphaned = (c.task_valid & (s.task_vm < 0)
+                    & (s.task_state == WAITING)
+                    & s.job_admitted[jnp.maximum(c.task_job, 0)]
+                    & (n_live > 0))
+        s = jax.lax.cond(jnp.any(orphaned),
+                         lambda s: place_mask(s, orphaned), lambda s: s, s)
+    return s
 
 
 def _route_links(c: EngineConsts, s: SimState, mask: jnp.ndarray) -> jnp.ndarray:
@@ -317,7 +485,21 @@ def _activate(c: EngineConsts, meta, pol, s: SimState) -> SimState:
     pair_all = (src_node * n_nodes + dst_node).astype(jnp.int32)
     reachable = (c.n_cand[pair_all] > 0) | (src_node == dst_node)
     p_ready = p_ready & reachable
+    if meta.has_failures:
+        # a packet whose endpoint task was unplaced by a host failure must
+        # wait for re-placement — its endpoints cannot resolve yet
+        n_tasks = s.task_vm.shape[0]
 
+        def _ep_placed(ref):
+            is_task = (ref >= 0) & (ref < NODE_OFFSET)
+            return jnp.where(is_task,
+                             s.task_vm[jnp.clip(ref, 0, n_tasks - 1)] >= 0,
+                             True)
+
+        p_ready = (p_ready & _ep_placed(c.pkt_src_task)
+                   & _ep_placed(c.pkt_dst_task))
+
+    link_bw = _effective_link_bw(c, meta, s)
     ch0 = fairshare.channel_counts(
         _route_links(c, s, s.pkt_state == ACTIVE), s.pkt_state == ACTIVE,
         meta.n_links)
@@ -331,16 +513,26 @@ def _activate(c: EngineConsts, meta, pol, s: SimState) -> SimState:
         # at random and keeps it (§5.2).
         fh = flow_hash_u32(c.pkt_src_task[i] + 1, c.pkt_dst_task[i] + 1,
                            pol["seed"])
+        # SDN's global view includes link liveness (link_bw has dead links
+        # at 0, so their candidates lose the bottleneck argmax); the legacy
+        # static hash is failure-blind and can re-pin the dead route.
         cand = choose_route(pol["routing"], c.routes[pair], c.n_cand[pair],
-                            c.link_bw, ch, fh)
+                            link_bw, ch, fh)
         links = c.routes[pair, cand]
         valid = links >= 0
         ch_new = ch.at[jnp.maximum(links, 0)].add(valid.astype(jnp.int32))
+        if meta.has_failures:
+            # a failure-reverted packet re-activates but keeps its FIRST
+            # start: its measured duration includes the outage
+            start_val = jnp.where(jnp.isnan(pkt_start[i]), s.time,
+                                  pkt_start[i])
+        else:
+            start_val = s.time
         return (
             jnp.where(ready, pkt_state.at[i].set(ACTIVE), pkt_state),
             jnp.where(ready, pkt_pair.at[i].set(pair), pkt_pair),
             jnp.where(ready, pkt_cand.at[i].set(cand), pkt_cand),
-            jnp.where(ready, pkt_start.at[i].set(s.time), pkt_start),
+            jnp.where(ready, pkt_start.at[i].set(start_val), pkt_start),
             jnp.where(ready, ch_new, ch),
         )
 
@@ -354,7 +546,8 @@ def _activate(c: EngineConsts, meta, pol, s: SimState) -> SimState:
 def _rates(c: EngineConsts, meta, pol, s: SimState):
     p_active = s.pkt_state == ACTIVE
     links = _route_links(c, s, p_active)
-    pkt_rate = fairshare.rates(pol["traffic"], links, p_active, c.link_bw,
+    pkt_rate = fairshare.rates(pol["traffic"], links, p_active,
+                               _effective_link_bw(c, meta, s),
                                meta.intra_bw)
     t_active = s.task_state == ACTIVE
     vm = jnp.maximum(s.task_vm, 0)
@@ -362,6 +555,13 @@ def _rates(c: EngineConsts, meta, pol, s: SimState):
         t_active.astype(jnp.int32))
     share = c.vm_total_mips[vm] / jnp.maximum(n_on_vm[vm], 1).astype(jnp.float32)
     task_rate = jnp.where(t_active, jnp.minimum(c.vm_core_mips[vm], share), 0.0)
+    if meta.has_failures:
+        # belt-and-braces: a task stranded on a dead host executes nothing
+        # (can only happen when EVERY host was dead at placement time)
+        task_rate = jnp.where(
+            s.host_dead[jnp.clip(c.vm_host[vm], 0,
+                                 c.host_fail_t.shape[0] - 1)],
+            0.0, task_rate)
     return pkt_rate, task_rate, links, p_active, t_active
 
 
@@ -371,6 +571,8 @@ def _finished(c: EngineConsts, meta, s: SimState) -> jnp.ndarray:
 
 
 def _step(c: EngineConsts, meta, pol, s: SimState) -> SimState:
+    if meta.has_failures:
+        s = _apply_failures(c, pol, s)
     s = _admit_and_place(c, meta, pol, s)
     s = _activate(c, meta, pol, s)
     pkt_rate, task_rate, links, p_active, t_active = _rates(c, meta, pol, s)
@@ -383,6 +585,17 @@ def _step(c: EngineConsts, meta, pol, s: SimState) -> SimState:
     future = (~s.job_admitted) & c.job_valid & (c.job_release > s.time)
     dt_r = jnp.min(jnp.where(future, c.job_release - s.time, _INF))
     dt = jnp.minimum(jnp.minimum(dt_p, dt_t), dt_r)
+    if meta.has_failures:
+        # fail/recover instants are rate breakpoints exactly like job
+        # releases — they join the analytic min, no event heap needed
+        # (DESIGN.md §7)
+        def _next(ts):
+            return jnp.min(jnp.where(ts > s.time, ts - s.time, _INF))
+
+        dt_f = jnp.minimum(
+            jnp.minimum(_next(c.host_fail_t), _next(c.host_recover_t)),
+            jnp.minimum(_next(c.link_fail_t), _next(c.link_recover_t)))
+        dt = jnp.minimum(dt, dt_f)
     stalled = jnp.isinf(dt)
     dt = jnp.where(stalled, 0.0, dt)
 
@@ -392,16 +605,38 @@ def _step(c: EngineConsts, meta, pol, s: SimState) -> SimState:
     mips_used = jnp.zeros_like(c.host_total_mips).at[host_of_task].add(
         jnp.where(t_active, task_rate, 0.0))
     util = jnp.clip(mips_used / jnp.maximum(c.host_total_mips, 1e-9), 0.0, 1.0)
+    if meta.has_failures:
+        util = jnp.where(s.host_dead, 0.0, util)  # dead hosts draw 0 W
     host_energy = s.host_energy + host_power(util, meta.energy) * dt
     host_busy = s.host_busy + jnp.where(util > 0, dt, 0.0)
     ch = fairshare.channel_counts(links, p_active, meta.n_links)
     live_link = (ch > 0).astype(jnp.int32)
+    if meta.has_failures:
+        live_link = jnp.where(s.link_dead, 0, live_link)  # port is down
     node_ports = jnp.zeros(meta.n_nodes, jnp.int32)
     node_ports = node_ports.at[c.link_src].add(live_link)
     node_ports = node_ports.at[c.link_dst].add(live_link)
     sw_ports = jax.lax.dynamic_slice_in_dim(node_ports, meta.n_hosts,
                                             meta.n_switches)
     switch_energy = s.switch_energy + switch_power(sw_ports, meta.energy) * dt
+
+    if meta.has_failures:
+        # per-job downtime: admitted, not done, and NOTHING of the job's
+        # moves over [t, t+dt) — the failure-induced outage metric
+        n_j = s.job_downtime.shape[0]
+        prog_t = ((t_active & (task_rate > 0) & c.task_valid)
+                  .astype(jnp.int32))
+        prog_p = ((p_active & (pkt_rate > 0) & c.pkt_valid)
+                  .astype(jnp.int32))
+        job_prog = jnp.zeros(n_j, jnp.int32)
+        job_prog = job_prog.at[jnp.maximum(c.task_job, 0)].max(prog_t)
+        job_prog = job_prog.at[jnp.maximum(c.pkt_job, 0)].max(prog_p)
+        job_live = (s.job_admitted & (s.job_out_done < c.job_n_out)
+                    & c.job_valid)
+        job_downtime = s.job_downtime + jnp.where(
+            job_live & (job_prog == 0), dt, 0.0)
+    else:
+        job_downtime = s.job_downtime
 
     # advance
     time = s.time + dt
@@ -436,7 +671,7 @@ def _step(c: EngineConsts, meta, pol, s: SimState) -> SimState:
         task_finish=task_finish,
         pkt_state=pkt_state, pkt_rem=pkt_rem, pkt_finish=pkt_finish,
         vm_load=vm_load, host_energy=host_energy, host_busy=host_busy,
-        switch_energy=switch_energy)
+        switch_energy=switch_energy, job_downtime=job_downtime)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,100 @@
+"""Failure & recovery schedules (DESIGN.md §7).
+
+The paper's YARN model detects host loss through the NodeManager→
+ResourceManager heartbeat (§3.1.2) and re-executes the lost tasks; related
+SDN work (Tiloca et al., Kreutz et al.) makes link-failure handling the
+discriminating test of a controller.  Both are modeled here WITHOUT an
+event heap: a failure schedule is four piecewise-constant breakpoint
+tensors — ``host_fail_t``/``host_recover_t`` per host and
+``link_fail_t``/``link_recover_t`` per directed link — that join the
+engine's analytic ``dt`` horizon min exactly like packet finishes and job
+releases do.  ``inf`` means "never": the all-``inf`` schedule is the
+no-failure engine, bit-identical to a run without any schedule.
+
+A device is DEAD on ``[fail_t, recover_t)`` (one outage per device per
+run; chain runs for multi-outage studies).  Dead hosts draw 0 W and lose
+their WAITING/ACTIVE tasks to re-placement; dead links carry 0 bandwidth
+and kick their in-flight packets back to WAITING for re-routing.
+
+Host-side (numpy) construction; seeded trace *generators* live in
+``repro.scenarios.failures``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+INF = np.float32(np.inf)
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureSchedule:
+    """Deterministic outage windows for every host and directed link.
+
+    All four arrays are float32; ``inf`` = the event never happens.  A
+    finite ``recover_t`` with an ``inf`` ``fail_t`` is meaningless and
+    rejected by ``validate``.
+    """
+
+    host_fail_t: np.ndarray     # f32 [n_hosts]
+    host_recover_t: np.ndarray  # f32 [n_hosts]
+    link_fail_t: np.ndarray     # f32 [n_links]
+    link_recover_t: np.ndarray  # f32 [n_links]
+
+    @property
+    def any_failures(self) -> bool:
+        return bool(np.isfinite(self.host_fail_t).any()
+                    or np.isfinite(self.link_fail_t).any())
+
+    @property
+    def n_events(self) -> int:
+        """Count of finite fail/recover instants (drives the engine's
+        ``max_steps`` safety cap)."""
+        return int(sum(np.isfinite(a).sum() for a in (
+            self.host_fail_t, self.host_recover_t,
+            self.link_fail_t, self.link_recover_t)))
+
+    def validate(self, n_hosts: int, n_links: int) -> "FailureSchedule":
+        assert self.host_fail_t.shape == (n_hosts,), \
+            f"host_fail_t shape {self.host_fail_t.shape} != ({n_hosts},)"
+        assert self.host_recover_t.shape == (n_hosts,)
+        assert self.link_fail_t.shape == (n_links,), \
+            f"link_fail_t shape {self.link_fail_t.shape} != ({n_links},)"
+        assert self.link_recover_t.shape == (n_links,)
+        for fail, rec in ((self.host_fail_t, self.host_recover_t),
+                          (self.link_fail_t, self.link_recover_t)):
+            assert np.all(rec >= fail), "recover_t must be >= fail_t"
+            assert not np.any(np.isfinite(rec) & ~np.isfinite(fail)), \
+                "finite recover_t without a finite fail_t"
+        return self
+
+
+def no_failures(n_hosts: int, n_links: int) -> FailureSchedule:
+    """The identity schedule: nothing ever fails (all-``inf``)."""
+    return FailureSchedule(
+        host_fail_t=np.full(n_hosts, INF, np.float32),
+        host_recover_t=np.full(n_hosts, INF, np.float32),
+        link_fail_t=np.full(n_links, INF, np.float32),
+        link_recover_t=np.full(n_links, INF, np.float32),
+    )
+
+
+def host_crash(n_hosts: int, n_links: int, host: int, at: float,
+               recover_at: float = np.inf) -> FailureSchedule:
+    """One host dies at ``at`` (permanently unless ``recover_at``)."""
+    s = no_failures(n_hosts, n_links)
+    s.host_fail_t[host] = at
+    s.host_recover_t[host] = recover_at
+    return s.validate(n_hosts, n_links)
+
+
+def link_cut(n_hosts: int, n_links: int, links, at: float,
+             recover_at: float = np.inf) -> FailureSchedule:
+    """Cut the given directed link ids at ``at`` (a full-duplex cable is
+    two directed links — pass both ids to sever the cable)."""
+    s = no_failures(n_hosts, n_links)
+    for li in np.atleast_1d(links):
+        s.link_fail_t[li] = at
+        s.link_recover_t[li] = recover_at
+    return s.validate(n_hosts, n_links)

@@ -60,10 +60,9 @@ def waterfill_rates(route_links: jnp.ndarray, active: jnp.ndarray,
     valid = route_links >= 0
     safe = jnp.maximum(route_links, 0)
 
-    def body(_, carry):
-        alloc, frozen = carry
-        live = active & ~frozen
-        # residual capacity per link after frozen allocations
+    def fill_level(alloc, frozen, live):
+        """Per-flow fill level: min over the route of (link residual after
+        frozen allocations) / (live flows on the link)."""
         used = jnp.zeros((n_links,), link_bw.dtype).at[safe.reshape(-1)].add(
             jnp.where(valid & frozen[:, None], alloc[:, None],
                       0.0).reshape(-1))
@@ -72,9 +71,12 @@ def waterfill_rates(route_links: jnp.ndarray, active: jnp.ndarray,
             (valid & live[:, None]).astype(jnp.int32).reshape(-1))
         share = resid / jnp.maximum(n_live, 1).astype(link_bw.dtype)
         share = jnp.where(n_live > 0, share, jnp.inf)
-        # fill level for each live flow = min share along its route
-        flow_share = jnp.where(valid, share[safe], jnp.inf)
-        level = jnp.min(flow_share, axis=-1)  # [N]
+        return jnp.min(jnp.where(valid, share[safe], jnp.inf), axis=-1)
+
+    def body(_, carry):
+        alloc, frozen = carry
+        live = active & ~frozen
+        level = fill_level(alloc, frozen, live)  # [N]
         # global fill step: freeze flows bottlenecked at the minimum level
         glob = jnp.min(jnp.where(live, level, jnp.inf))
         glob = jnp.where(jnp.isinf(glob), 0.0, glob)
@@ -86,9 +88,14 @@ def waterfill_rates(route_links: jnp.ndarray, active: jnp.ndarray,
     alloc0 = jnp.zeros(route_links.shape[0], link_bw.dtype)
     frozen0 = jnp.zeros(route_links.shape[0], bool)
     alloc, frozen = jax.lax.fori_loop(0, n_iter, body, (alloc0, frozen0))
-    # any still-unfrozen live flow (iter cap hit) falls back to Eq. 3
-    fallback = eq3_rates(route_links, active, link_bw, intra_bw)
-    alloc = jnp.where(active & ~frozen, fallback, alloc)
+    # any still-unfrozen live flow (iter cap hit) gets its CURRENT fill
+    # level: each link then carries at most n_live * (resid/n_live) = resid
+    # on top of the frozen allocations — never oversubscribed.  (The old
+    # fallback handed out Eq. 3 rates computed against the FULL link
+    # capacity, stacking on top of frozen water-fill allocations and
+    # exceeding shared links.)
+    live = active & ~frozen
+    alloc = jnp.where(live, fill_level(alloc, frozen, live), alloc)
     # intra-host flows
     empty = ~jnp.any(valid, axis=-1)
     alloc = jnp.where(active & empty, jnp.asarray(intra_bw, link_bw.dtype), alloc)

@@ -19,6 +19,7 @@ from typing import List, Sequence
 import numpy as np
 
 from .energy import EnergyParams
+from .failures import FailureSchedule
 from .routing import RouteTable, build_route_table
 from .topology import Topology
 
@@ -90,6 +91,9 @@ class SimSetup:
     pkt_src_task: np.ndarray    # -1 -> SAN
     pkt_dst_task: np.ndarray    # -1 -> SAN
     pkt_valid: np.ndarray
+    # optional deterministic outage windows (DESIGN.md §7); None = the
+    # all-inf no-failure schedule
+    failures: FailureSchedule | None = None
 
     @property
     def n_jobs(self) -> int:
@@ -106,7 +110,8 @@ class SimSetup:
 
 def build_setup(jobs: Sequence[JobSpec], cluster: ClusterSpec,
                 route_table: RouteTable | None = None,
-                k_max: int = 16, split: int = 1) -> SimSetup:
+                k_max: int = 16, split: int = 1,
+                failures: FailureSchedule | None = None) -> SimSetup:
     """``split`` = network packets per logical transfer (paper: workloads
     specify "the size of network packets" in the CSV; a data block is sent as
     multiple packet objects, EACH routed by the controller — "two packets
@@ -171,9 +176,12 @@ def build_setup(jobs: Sequence[JobSpec], cluster: ClusterSpec,
 
     n_t = len(t_job)
     n_p = len(p_job)
+    if failures is not None:
+        failures.validate(cluster.topo.n_hosts, cluster.topo.n_links)
     return SimSetup(
         cluster=cluster,
         route_table=rt,
+        failures=failures,
         jobs=tuple(jobs),
         job_release=np.asarray([j.submit_time for j in jobs], np.float32),
         job_total_mi=np.asarray([j.total_mi for j in jobs], np.float32),

@@ -39,6 +39,10 @@ JOBSEL_FCFS = 0        # paper use-case
 JOBSEL_SJF = 1         # shortest (total MI) job first
 JOBSEL_PRIORITY = 2    # user-supplied priority value
 
+# recovery after a host failure (DESIGN.md §7)
+RECOVERY_RESTART = 0   # YARN re-execution: lost task progress is redone
+RECOVERY_RESUME = 1    # beyond-paper checkpointing: progress survives
+
 
 @dataclasses.dataclass(frozen=True)
 class PolicyField:
@@ -182,6 +186,11 @@ register_policy_field(
 register_policy_field(
     "job_concurrency", 1_000_000,  # paper use-case: effectively unlimited
     doc="max jobs admitted concurrently (ApplicationMaster width)")
+register_policy_field(
+    "recovery", RECOVERY_RESTART,
+    choices={"restart": RECOVERY_RESTART, "resume": RECOVERY_RESUME},
+    doc="host-failure recovery: YARN re-execution vs checkpoint resume "
+        "(DESIGN.md §7)")
 register_policy_field(
     "seed", 0,
     doc="per-replica hash seed (random placement / legacy route pins)")

@@ -58,6 +58,13 @@ def job_report_arrays(pkt_job, pkt_phase, task_job, task_kind, job_release,
     j_mp = _seg_max(tdur, task_job, tdone & (task_kind == KIND_MAP), n_j)   # Eq. 7
     j_rd = _seg_max(tdur, task_job, tdone & (task_kind == KIND_REDUCE), n_j)  # Eq. 8
 
+    # failure & recovery metrics (DESIGN.md §7): 0 everywhere without a
+    # failure schedule
+    reexec = jnp.zeros((n_j,), jnp.int32).at[jnp.maximum(task_job, 0)].add(
+        jnp.where(task_job >= 0, s.task_restarts, 0))
+    reroute = jnp.zeros((n_j,), jnp.int32).at[jnp.maximum(pkt_job, 0)].add(
+        jnp.where(pkt_job >= 0, s.pkt_reroutes, 0))
+
     return {
         "transmission_time": j_tr,
         "t_storage_to_map": t1,
@@ -69,6 +76,9 @@ def job_report_arrays(pkt_job, pkt_phase, task_job, task_kind, job_release,
         "completion_measured": s.job_done_t - job_release,
         "queue_delay": s.job_admit_t - job_release,
         "done_time": s.job_done_t,
+        "task_reexecs": reexec,
+        "pkt_reroutes": reroute,
+        "downtime_s": s.job_downtime,
     }
 
 

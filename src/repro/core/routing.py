@@ -140,6 +140,11 @@ def candidate_bottleneck_bw(routes_k: jnp.ndarray, n_cand: jnp.ndarray,
 
     routes_k : int32 [k_max, max_hops] link ids (-1 pad) for ONE pair
     returns  : f32 [k_max]  (-inf for invalid candidates)
+
+    ``link_bw`` is the EFFECTIVE capacity: the engine zeroes dead links
+    (DESIGN.md §7), so a candidate crossing an outage scores 0 and loses
+    the argmax to any live route — the controller's global view includes
+    link liveness for free.
     """
     links = routes_k  # [K, H]
     valid_hop = links >= 0

@@ -36,13 +36,25 @@ class SimMeta:
     intra_bw: float
     energy: EnergyParams
     max_steps: int
+    # True iff some replica's failure schedule has a finite instant
+    # (DESIGN.md §7).  A trace-time Python bool: with False the engine
+    # traces EXACTLY the pre-failure program, so a no-failure run is
+    # bit-identical to the engine without this subsystem.
+    has_failures: bool = False
 
     @classmethod
     def coerce(cls, meta: "SimMeta" | Mapping[str, Any]) -> "SimMeta":
-        """Accept an already-typed SimMeta or a legacy meta dict."""
+        """Accept an already-typed SimMeta or a legacy meta dict (fields
+        with defaults may be absent from the dict)."""
         if isinstance(meta, cls):
             return meta
-        return cls(**{f.name: meta[f.name] for f in dataclasses.fields(cls)})
+        kw = {}
+        for f in dataclasses.fields(cls):
+            if f.name in meta:
+                kw[f.name] = meta[f.name]
+            elif f.default is dataclasses.MISSING:
+                raise KeyError(f.name)
+        return cls(**kw)
 
     # legacy dict-style access (old code spelled ``meta["n_vms"]``)
     def __getitem__(self, key: str) -> Any:

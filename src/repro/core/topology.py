@@ -79,6 +79,39 @@ class Topology:
             for i, (s, d) in enumerate(zip(self.link_src, self.link_dst))
         }
 
+    def cable_pairs(self) -> List[Tuple[int, int]]:
+        """Directed-link id pairs forming one full-duplex cable.
+
+        ``_build`` emits the two directions of every undirected edge
+        adjacently, so pairs are ``(2i, 2i+1)`` when that layout holds
+        (verified here); failure generators cut cables, not directions
+        (DESIGN.md §7).  A hand-built topology without the layout gets
+        reverse-lookup pairing instead."""
+        pairs: List[Tuple[int, int]] = []
+        n = self.n_links
+        adjacent = (n % 2 == 0 and all(
+            self.link_src[2 * i] == self.link_dst[2 * i + 1]
+            and self.link_dst[2 * i] == self.link_src[2 * i + 1]
+            for i in range(n // 2)))
+        if adjacent:
+            return [(2 * i, 2 * i + 1) for i in range(n // 2)]
+        idx = self.link_index()
+        seen = set()
+        for i, (s, d) in enumerate(zip(self.link_src, self.link_dst)):
+            if i in seen:
+                continue
+            j = idx.get((int(d), int(s)), i)
+            seen.update((i, j))
+            pairs.append((i, j))
+        return pairs
+
+    def links_touching(self, node: int) -> List[int]:
+        """Directed link ids with ``node`` as an endpoint (both directions
+        — what a NIC/port failure at that node takes down)."""
+        return [i for i, (s, d) in enumerate(zip(self.link_src,
+                                                 self.link_dst))
+                if node in (int(s), int(d))]
+
 
 def _build(edges: List[Tuple[int, int, float]], n_hosts: int, n_switches: int,
            n_storage: int, names: Tuple[str, ...] = ()) -> Topology:

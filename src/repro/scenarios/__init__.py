@@ -1,5 +1,6 @@
 """Scenario & topology library: named topology×workload bundles plus a
 packed multi-topology sweep driver (DESIGN.md §5)."""
+from .failures import failure_injector, random_failures
 from .registry import (Scenario, get_scenario, list_scenarios, make_cluster,
                        register)
 from .sweep import (SweepResult, pack_setups, policy_arrays, sweep_grid)
@@ -10,4 +11,5 @@ __all__ = [
     "Scenario", "get_scenario", "list_scenarios", "make_cluster", "register",
     "SweepResult", "pack_setups", "policy_arrays", "sweep_grid",
     "JobTemplate", "bursty_workload", "uniform_workload", "zipf_workload",
+    "failure_injector", "random_failures",
 ]

@@ -12,16 +12,18 @@ raw ``SimSetup``s interchangeably (DESIGN.md §6).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
 from ..core.energy import EnergyParams
+from ..core.failures import FailureSchedule
 from ..core.mapreduce import ClusterSpec, JobSpec, SimSetup, build_setup
 from ..core.topology import (Topology, canonical_tree, fat_tree, leaf_spine,
                              paper_fat_tree)
 from ..core.usecase import (HOST_CORES, HOST_MIPS, VM_CORES, VM_CORE_MIPS,
                             paper_jobs)
+from .failures import random_failures
 from .workloads import bursty_workload, uniform_workload, zipf_workload
 
 
@@ -54,12 +56,16 @@ class Scenario:
     vms_per_host: int = 1
     split: int = 1
     k_max: int = 8
+    # optional seeded outage trace (DESIGN.md §7), built against the
+    # realized topology
+    failures: Optional[Callable[[Topology], FailureSchedule]] = None
 
     def build(self) -> SimSetup:
         topo = self.topology()
         return build_setup(list(self.workload()), make_cluster(
             topo, vms_per_host=self.vms_per_host),
-            k_max=self.k_max, split=self.split)
+            k_max=self.k_max, split=self.split,
+            failures=self.failures(topo) if self.failures else None)
 
 
 _REGISTRY: Dict[str, Callable[..., Scenario]] = {}
@@ -131,6 +137,47 @@ def _leaf_spine(n_spine: int = 4, n_leaf: int = 4, hosts_per_leaf: int = 4,
         topology=lambda: leaf_spine(n_spine, n_leaf, hosts_per_leaf),
         workload=lambda: zipf_workload(n_jobs=n_jobs, seed=seed),
         description=f"{n_spine}-spine/{n_leaf}-leaf Clos, Zipf job sizes",
+    )
+
+
+@register("paper-fabric-failures")
+def _paper_fabric_failures(seed: int = 0, n_each: int = 1, split: int = 2,
+                           k_max: int = 16, host_rate: float = 2e-4,
+                           link_rate: float = 2e-4, mttr: float = 120.0,
+                           horizon: float = 1500.0) -> Scenario:
+    """The paper fabric under a seeded exponential outage trace
+    (DESIGN.md §7) — the failure counterpart of ``paper-fabric``, where
+    SDN's reroute-around-the-failure vs legacy's static hash becomes the
+    headline comparison."""
+    return Scenario(
+        name="paper-fabric-failures",
+        topology=paper_fat_tree,
+        workload=lambda: paper_jobs(seed=seed, n_each=n_each),
+        description="paper §5 fabric + seeded host/link outages",
+        split=split,
+        k_max=k_max,
+        failures=lambda topo: random_failures(
+            topo, host_rate=host_rate, link_rate=link_rate, mttr=mttr,
+            horizon=horizon, seed=seed),
+    )
+
+
+@register("leaf-spine-failures")
+def _leaf_spine_failures(n_spine: int = 4, n_leaf: int = 4,
+                         hosts_per_leaf: int = 4, seed: int = 0,
+                         n_jobs: int = 6, link_rate: float = 5e-4,
+                         mttr: float = 60.0,
+                         horizon: float = 2000.0) -> Scenario:
+    """Leaf-spine Clos with link-only outages: with ``n_spine`` equal-hop
+    routes per inter-leaf pair, every cut is SDN-routable-around."""
+    return Scenario(
+        name=f"leaf-spine-failures-{n_spine}x{n_leaf}",
+        topology=lambda: leaf_spine(n_spine, n_leaf, hosts_per_leaf),
+        workload=lambda: zipf_workload(n_jobs=n_jobs, seed=seed),
+        description="leaf-spine Clos + seeded link cuts",
+        failures=lambda topo: random_failures(
+            topo, link_rate=link_rate, mttr=mttr, horizon=horizon,
+            seed=seed),
     )
 
 

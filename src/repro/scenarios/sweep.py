@@ -35,7 +35,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.engine import EngineConsts, NODE_OFFSET, job_valid_mask
+from ..core.engine import (EngineConsts, NODE_OFFSET, default_max_steps,
+                           job_valid_mask)
+from ..core.failures import no_failures
 from ..core.mapreduce import SimSetup
 from ..core.policies import as_policy_arrays, policy_field_names
 from ..core.report import energy_report, job_report_consts
@@ -52,6 +54,7 @@ def _pack_one(setup: SimSetup, dims: Dict[str, int]) -> Dict[str, np.ndarray]:
     """One scenario's EngineConsts fields, padded + renumbered to ``dims``."""
     topo = setup.cluster.topo
     rt = setup.route_table
+    sched = setup.failures or no_failures(topo.n_hosts, topo.n_links)
     H, SW = dims["n_hosts"], dims["n_switches"]
     Nn, L, K, HP = dims["n_nodes"], dims["n_links"], dims["k_max"], dims["max_hops"]
     n_h, n_sw = topo.n_hosts, topo.n_switches
@@ -135,6 +138,15 @@ def _pack_one(setup: SimSetup, dims: Dict[str, int]) -> Dict[str, np.ndarray]:
         "n_switches": np.int32(n_sw),
         "storage_node": node_map(cl.storage_node)[()],
         "n_vms": np.int32(cl.vm_host.shape[0]),
+        # failure schedule (DESIGN.md §7): pad hosts/links never fail
+        "host_fail_t": _pad1(np.asarray(sched.host_fail_t, np.float32),
+                             H, np.inf),
+        "host_recover_t": _pad1(np.asarray(sched.host_recover_t, np.float32),
+                                H, np.inf),
+        "link_fail_t": _pad1(np.asarray(sched.link_fail_t, np.float32),
+                             L, np.inf),
+        "link_recover_t": _pad1(np.asarray(sched.link_recover_t, np.float32),
+                                L, np.inf),
     }
 
 
@@ -174,8 +186,9 @@ def pack_setups(setups: Sequence[SimSetup]
         n_vms=dims["n_vms"],
         intra_bw=next(iter(intra)),
         energy=next(iter(energy)),
-        max_steps=max(4 * (s.n_packets + s.n_tasks) + 4 * s.n_jobs + 64
-                      for s in setups),
+        max_steps=max(default_max_steps(s) for s in setups),
+        has_failures=any(s.failures is not None and s.failures.any_failures
+                         for s in setups),
     )
     return consts, meta
 

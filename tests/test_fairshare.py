@@ -85,3 +85,24 @@ def test_waterfill_total_throughput_geq_eq3(inst):
                                     jnp.asarray(active),
                                     jnp.asarray(bw), INTRA))
     assert rw.sum() >= r3.sum() * (1 - 1e-3)
+
+
+@given(instances(), st.integers(0, 3))
+@settings(max_examples=60, deadline=None)
+def test_capacity_invariant_both_policies_any_iter_cap(inst, n_iter):
+    """The engine-facing invariant: under BOTH traffic policies the summed
+    allocation on every link stays within its bandwidth — including when
+    the water-fill iteration cap leaves flows unfrozen and the clamped
+    fallback kicks in (the old Eq. 3 fallback stacked full-capacity rates
+    on top of frozen allocations and oversubscribed shared links)."""
+    bw, routes, active = inst
+    for rates in (
+            eq3_rates(jnp.asarray(routes), jnp.asarray(active),
+                      jnp.asarray(bw), INTRA),
+            waterfill_rates(jnp.asarray(routes), jnp.asarray(active),
+                            jnp.asarray(bw), INTRA),
+            # force the iteration-cap fallback path
+            waterfill_rates(jnp.asarray(routes), jnp.asarray(active),
+                            jnp.asarray(bw), INTRA, n_iter=n_iter)):
+        load = link_loads(routes, np.asarray(rates), bw.shape[0])
+        assert np.all(load <= bw * (1 + 1e-3)), (load, bw)

@@ -1,0 +1,56 @@
+"""Deterministic water-fill iteration-cap fallback regression (no
+hypothesis dependency — the property-test version lives in
+test_fairshare.py)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fairshare import eq3_rates, waterfill_rates
+
+INTRA = 1e12
+
+# three bottleneck levels -> three freezing rounds:
+#   L0 (bw 0.2): f1, f2            freeze round 1 at 0.1
+#   L1 (bw 2.0): f0, f1, f3        f3 freezes round 2 (via L2), f0 round 3
+#   L2 (bw 0.9): f3, f4, f5        freeze round 2 at 0.3
+BW = np.asarray([0.2, 2.0, 0.9], np.float32)
+ROUTES = np.asarray([
+    [1, -1],   # f0
+    [0, 1],    # f1
+    [0, -1],   # f2
+    [1, 2],    # f3
+    [2, -1],   # f4
+    [2, -1],   # f5
+], np.int32)
+ACTIVE = np.ones(6, bool)
+
+
+def loads(rates):
+    out = np.zeros(BW.shape[0])
+    for f in range(ROUTES.shape[0]):
+        for li in ROUTES[f]:
+            if li >= 0:
+                out[li] += float(rates[f])
+    return out
+
+
+def wf(n_iter=None):
+    return np.asarray(waterfill_rates(jnp.asarray(ROUTES),
+                                      jnp.asarray(ACTIVE), jnp.asarray(BW),
+                                      INTRA, n_iter=n_iter))
+
+
+def test_capacity_held_at_every_iteration_cap():
+    full = wf()
+    for n_iter in range(0, 5):
+        rates = wf(n_iter)
+        assert np.all(rates > 0)
+        assert np.all(loads(rates) <= BW * (1 + 1e-4)), (n_iter, rates)
+    # enough iterations -> the cap path vanishes
+    assert np.allclose(wf(3), full)
+
+
+def test_zero_iterations_degenerates_to_eq3():
+    """With nothing frozen the clamped fallback level IS Eq. 3."""
+    r3 = np.asarray(eq3_rates(jnp.asarray(ROUTES), jnp.asarray(ACTIVE),
+                              jnp.asarray(BW), INTRA))
+    assert np.allclose(wf(0), r3)
