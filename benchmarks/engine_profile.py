@@ -1,0 +1,208 @@
+"""Engine step-kernel profile: steps/s and sims/s per registry scenario
+(DESIGN.md §8).
+
+Three size tiers — small (the paper's §5 fabric), medium (a 16-host
+leaf-spine Clos) and large (``leaf-spine-xl``: 128 hosts, >=1k tasks,
+>=4k packets) — each run as a single compiled simulation, timed after an
+explicit ``jax.block_until_ready`` so wall numbers measure compute, not
+dispatch.  A small vmapped policy batch per tier reports sims/s.
+
+The JSON report (``--json experiments/BENCH_engine.json``) is the
+committed perf trajectory; CI re-runs the profile and fails when steps/s
+regresses more than ``--max-regress`` against ``--baseline`` (the
+baseline is refreshed in any PR that intentionally moves it).
+
+  PYTHONPATH=src python benchmarks/engine_profile.py
+  PYTHONPATH=src python benchmarks/engine_profile.py --scenarios small medium
+  PYTHONPATH=src python benchmarks/engine_profile.py \
+      --json experiments/BENCH_engine.json
+  PYTHONPATH=src python benchmarks/engine_profile.py \
+      --baseline experiments/BENCH_engine.json --max-regress 0.2
+"""
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.api import runners
+from repro.core import (PLACE_LEAST_USED, PLACE_RANDOM, PLACE_ROUND_ROBIN,
+                        ROUTE_LEGACY, ROUTE_SDN, PolicyConfig)
+from repro.core.engine import make_consts
+from repro.core.policies import as_policy_arrays
+from repro.scenarios import get_scenario
+from repro.scenarios.sweep import policy_arrays
+
+# tier -> (registered scenario, default policy-batch width).  All sizes
+# come from the registry so the profile and the bit-identity suite
+# exercise the same configurations.  The large tier skips the vmapped
+# batch by default: under vmap the kernel's skip-when-idle conds become
+# run-both-branches selects (DESIGN.md §8), so a batched xl run measures
+# a different (much slower) program than the single-replica path the
+# perf gate tracks.
+TIERS = (
+    ("small", "paper-fabric", 6),
+    ("medium", "leaf-spine", 6),
+    ("large", "leaf-spine-xl", 0),
+)
+
+# the profiled policy: SDN routing + least-used placement (both take the
+# serialized branch of the kernel, so this is the worst case for the
+# vectorized rewrite) under a realistic admission budget.
+PROFILE_POLICY = dict(job_concurrency=4)
+
+BATCH_POLICIES = [
+    PolicyConfig(routing=r, placement=p, **PROFILE_POLICY)
+    for r in (ROUTE_SDN, ROUTE_LEGACY)
+    for p in (PLACE_LEAST_USED, PLACE_ROUND_ROBIN, PLACE_RANDOM)
+]
+
+
+def profile_scenario(name: str, iters: int, batch_width: int) -> dict:
+    t0 = time.perf_counter()
+    setup = get_scenario(name).build()
+    consts, meta = make_consts(setup)
+    pol = as_policy_arrays(PolicyConfig(**PROFILE_POLICY))
+    build_s = time.perf_counter() - t0
+
+    run = runners.get_runner(meta, "single")
+    jax.block_until_ready(consts)            # consts transfer out of the timer
+    t0 = time.perf_counter()
+    s = jax.block_until_ready(run(consts, pol))
+    compile_s = time.perf_counter() - t0
+
+    # noise here is one-sided (GC pauses, co-tenant CPU steal only ever
+    # slow a run down), so the gated number is the BEST observed run; the
+    # small tiers finish in milliseconds, so rerun until the total timed
+    # window is at least ~0.5 s to get a stable best
+    t0 = time.perf_counter()
+    s = jax.block_until_ready(run(consts, pol))
+    est = max(time.perf_counter() - t0, 1e-4)
+    n_timed = max(iters, min(200, int(0.5 / est) + 1))
+
+    walls = []
+    for _ in range(n_timed):
+        t0 = time.perf_counter()
+        s = jax.block_until_ready(run(consts, pol))
+        walls.append(time.perf_counter() - t0)
+    wall_s = min(walls)
+    steps = int(s.steps)
+
+    out = {
+        "scenario": name,
+        "n_hosts": setup.cluster.topo.n_hosts,
+        "n_links": setup.cluster.topo.n_links,
+        "n_jobs": setup.n_jobs,
+        "n_tasks": setup.n_tasks,
+        "n_packets": setup.n_packets,
+        "stalled": bool(s.stalled),
+        "steps": steps,
+        "build_s": build_s,
+        "compile_s": compile_s,
+        "timed_runs": n_timed,
+        "wall_s": wall_s,                       # best-of-n_timed
+        "wall_mean_s": sum(walls) / n_timed,
+        "steps_per_s": steps / wall_s,
+        "sims_per_s": 1.0 / wall_s,
+    }
+
+    if batch_width > 0:
+        cyc = [BATCH_POLICIES[i % len(BATCH_POLICIES)]
+               for i in range(batch_width)]
+        pols = {k: jax.numpy.asarray(v)
+                for k, v in policy_arrays(cyc).items()}
+        brun = runners.get_runner(meta, "policy_batch")
+        sb = jax.block_until_ready(brun(consts, pols))      # compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            sb = jax.block_until_ready(brun(consts, pols))
+        bwall = (time.perf_counter() - t0) / iters
+        out["batch"] = {
+            "width": batch_width,
+            "wall_s": bwall,
+            "sims_per_s": batch_width / bwall,
+            "steps_per_s": int(np.asarray(sb.steps).sum()) / bwall,
+        }
+    return out
+
+
+def check_regression(report: dict, baseline_path: str,
+                     max_regress: float) -> int:
+    """Exit code: 1 if any shared tier's steps/s fell > max_regress."""
+    with open(baseline_path) as f:
+        base = json.load(f)
+    failures = []
+    for tier, cur in report["tiers"].items():
+        ref = base.get("tiers", {}).get(tier)
+        if not ref:
+            continue
+        floor = ref["steps_per_s"] * (1.0 - max_regress)
+        status = "OK" if cur["steps_per_s"] >= floor else "REGRESSED"
+        print(f"perf gate [{tier:6}] {cur['steps_per_s']:10.0f} steps/s "
+              f"vs baseline {ref['steps_per_s']:10.0f} "
+              f"(floor {floor:10.0f}) {status}")
+        if status != "OK":
+            failures.append(tier)
+    if failures:
+        print(f"steps/s regression > {max_regress:.0%} on: "
+              f"{', '.join(failures)} (refresh the baseline in-PR if "
+              "intentional)")
+        return 1
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenarios", nargs="+",
+                    default=[t for t, _, _ in TIERS],
+                    choices=[t for t, _, _ in TIERS],
+                    help="size tiers to profile")
+    ap.add_argument("--iters", type=int, default=3,
+                    help="timed runs per measurement")
+    ap.add_argument("--batch-width", type=int, default=None,
+                    help="policy-batch width for sims/s "
+                         "(0 = skip; default: per-tier)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the machine-readable report")
+    ap.add_argument("--baseline", metavar="PATH", default=None,
+                    help="committed BENCH_engine.json to gate against")
+    ap.add_argument("--max-regress", type=float, default=0.2,
+                    help="allowed fractional steps/s drop vs --baseline")
+    args = ap.parse_args(argv)
+
+    by_tier = {t: (name, bw) for t, name, bw in TIERS}
+    report = {"benchmark": "engine_profile",
+              "backend": jax.default_backend(),
+              "iters": args.iters,
+              "tiers": {}}
+    hdr = (f"{'tier':6} {'scenario':14} {'tasks':>6} {'pkts':>6} "
+           f"{'steps':>6} {'wall(s)':>8} {'steps/s':>9} {'sims/s':>7}")
+    print(hdr)
+    print("-" * len(hdr))
+    for tier in args.scenarios:
+        name, tier_bw = by_tier[tier]
+        bw = tier_bw if args.batch_width is None else args.batch_width
+        r = profile_scenario(name, args.iters, bw)
+        report["tiers"][tier] = r
+        sims = r.get("batch", {}).get("sims_per_s", r["sims_per_s"])
+        print(f"{tier:6} {name:14} {r['n_tasks']:6d} "
+              f"{r['n_packets']:6d} {r['steps']:6d} {r['wall_s']:8.3f} "
+              f"{r['steps_per_s']:9.0f} {sims:7.2f}"
+              + ("  STALLED" if r["stalled"] else ""))
+
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"wrote {args.json}")
+
+    if args.baseline:
+        return check_regression(report, args.baseline, args.max_regress)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

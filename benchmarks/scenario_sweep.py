@@ -56,6 +56,7 @@ def main():
     pols = [(pn, PolicyConfig(placement=pid, job_concurrency=args.concurrency))
             for pn, pid in PLACEMENTS[: max(1, args.placements)]]
     exp = Experiment(scenarios=scens, policies=pols)
+    jax.block_until_ready(exp.build()[0])   # consts on device, outside timers
     t_build = time.time() - t0
 
     t0 = time.time()

@@ -23,6 +23,7 @@ def single_run_events_per_sec(setup) -> Dict[str, float]:
     consts, meta = make_consts(setup)
     run = runners.get_runner(meta, "single")
     pol = as_policy_arrays(PolicyConfig())
+    jax.block_until_ready(consts)   # device transfer outside the timers
     t0 = time.perf_counter()
     s = run(consts, pol)
     jax.block_until_ready(s.time)
@@ -43,6 +44,7 @@ def sweep_scaling(setup, widths=(1, 8, 32)) -> Dict[str, Dict]:
         pols = [PolicyConfig(routing=ROUTE_SDN if i % 2 == 0 else ROUTE_LEGACY,
                              job_concurrency=2, seed=i) for i in range(w)]
         exp = Experiment(scenarios=setup, policies=pols)
+        jax.block_until_ready(exp.build()[0])
         t0 = time.perf_counter()
         res = exp.run()
         jax.block_until_ready(res.states.time)

@@ -23,6 +23,13 @@ kind            consts                         policies
 "grid" nests the vmaps (scenarios outer, policies inner) so the dense
 consts tensors broadcast across the policy axis instead of being
 materialized P times (DESIGN.md §5).
+
+The t=0 state is built by a separate (cached, jitted) initializer and
+passed into the main program as a DONATED argument (DESIGN.md §8): XLA
+aliases the init buffers straight into the while-loop carry and the final
+``SimState`` outputs instead of materializing a second copy per replica.
+(Buffer donation is a no-op on the CPU backend, so it is only requested
+elsewhere.)
 """
 from __future__ import annotations
 
@@ -31,7 +38,7 @@ from typing import Callable, Tuple
 
 import jax
 
-from ..core.engine import make_packed_simulator
+from ..core.engine import init_state_from_consts, make_packed_simulator
 from ..core.simmeta import SimMeta
 
 KINDS = ("single", "policy_batch", "zipped", "grid")
@@ -83,22 +90,42 @@ def get_runner(meta: SimMeta, kind: str) -> Callable:
 def _build(meta: SimMeta, kind: str) -> Callable:
     base = make_packed_simulator(meta)
 
-    def counted(consts, pol):
+    def counted(consts, pol, s0):
         # executes at TRACE time only — the compiled program has no trace
         # of it, so the counter counts traces, not runs.
         global _TRACE_COUNT
         _TRACE_COUNT += 1
-        return base(consts, pol)
+        return base(consts, pol, s0)
+
+    def init_one(consts, pol):
+        del pol  # the t=0 state depends on consts only; pol carries the
+        #          batch axes the vmapped variants map over
+        return init_state_from_consts(consts, meta.n_switches)
 
     if kind == "single":
-        fn = counted
+        fn, init = counted, init_one
     elif kind == "policy_batch":
-        fn = jax.vmap(counted, in_axes=(None, 0))
+        fn = jax.vmap(counted, in_axes=(None, 0, 0))
+        init = jax.vmap(init_one, in_axes=(None, 0))
     elif kind == "zipped":
         fn = jax.vmap(counted)
+        init = jax.vmap(init_one)
     else:  # grid: scenarios outer, policies inner
-        def fn(consts, pols):
-            return jax.vmap(
-                lambda c: jax.vmap(lambda p: counted(c, p))(pols))(consts)
+        def fn(consts, pols, s0):
+            return jax.vmap(lambda c, s0c: jax.vmap(
+                lambda p, s0p: counted(c, p, s0p))(pols, s0c))(consts, s0)
 
-    return jax.jit(fn)
+        def init(consts, pols):
+            return jax.vmap(lambda c: jax.vmap(
+                lambda p: init_one(c, p))(pols))(consts)
+
+    # donating s0 lets the loop carry / outputs alias the init buffers;
+    # the CPU backend has no donation support and would warn on every call
+    donate = (2,) if jax.default_backend() != "cpu" else ()
+    run_jit = jax.jit(fn, donate_argnums=donate)
+    init_jit = jax.jit(init)
+
+    def call(consts, pols):
+        return run_jit(consts, pols, init_jit(consts, pols))
+
+    return call

@@ -11,6 +11,18 @@ One while-loop iteration = one event:
   packet activation (routed) -> rates -> dt = earliest horizon ->
   energy += power*dt -> advance -> completions
 
+The step interior is (near-)fully data-parallel (DESIGN.md §8): admission
+ranks released jobs against the concurrency budget in one stable sort,
+placement resolves a whole batch of tasks by rank-plus-counter arithmetic
+over the live-VM prefix-sum remap (with a compacted scan only for the
+load-feedback least-used policy), packet activation iterates only the
+ready set (the legacy hash route needs no feedback and vectorizes
+entirely), and the per-step network tensors — route links, channel
+counts, effective link bandwidth — are computed once and threaded through
+rates and energy.  Sequential tie-break order is preserved everywhere, so
+the kernel is bit-identical to the scalar event loop it replaced
+(tests/test_engine_equiv.py).
+
 Everything is vmap-safe: ``simulate_batch`` sweeps policy/seed vectors as one
 tensor program (the beyond-paper capability — see DESIGN.md §2).
 
@@ -26,6 +38,7 @@ from typing import Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import fairshare
 from .failures import no_failures
@@ -33,7 +46,8 @@ from .mapreduce import ACTIVE, DONE, SimSetup, VOID, WAITING
 from .energy import host_power, switch_power
 from .policies import (JOBSEL_PRIORITY, JOBSEL_SJF, PLACE_RANDOM,
                        PLACE_ROUND_ROBIN, RECOVERY_RESTART, as_policy_arrays)
-from .routing import choose_route, flow_hash_u32
+from .routing import (ROUTE_SDN, flow_hash_u32, legacy_route_choice,
+                      sdn_route_choice)
 from .simmeta import SimMeta
 
 _INF = jnp.float32(jnp.inf)
@@ -43,6 +57,29 @@ def job_valid_mask(job_n_out):
     """A job slot is live iff it expects output packets — the ONE definition
     of job validity, shared by make_consts and the packed-sweep builder."""
     return job_n_out > 0
+
+
+def task_rank_in_job_np(task_job) -> np.ndarray:
+    """Host-side: position of each task among the tasks sharing its job id,
+    in task-index order (pad tasks form their own ``-1`` group).  Static
+    per setup — shared by make_consts and the packed-sweep builder."""
+    tj = np.asarray(task_job, np.int64)
+    order = np.argsort(tj, kind="stable")
+    g = tj[order]
+    n = g.shape[0]
+    starts = np.r_[0, np.flatnonzero(g[1:] != g[:-1]) + 1]
+    sizes = np.diff(np.r_[starts, n])
+    out = np.empty(n, np.int32)
+    out[order] = (np.arange(n) - np.repeat(starts, sizes)).astype(np.int32)
+    return out
+
+
+def job_n_tasks_np(task_job, task_valid, n_jobs: int) -> np.ndarray:
+    """Host-side: valid-task count per job (static per setup)."""
+    tj = np.asarray(task_job, np.int64)
+    tv = np.asarray(task_valid, bool)
+    return np.bincount(tj[tv & (tj >= 0)],
+                       minlength=n_jobs).astype(np.int32)[:n_jobs]
 
 
 class EngineConsts(NamedTuple):
@@ -70,6 +107,12 @@ class EngineConsts(NamedTuple):
     task_mi: jnp.ndarray
     task_need: jnp.ndarray
     task_valid: jnp.ndarray
+    # position of each task among its job's tasks (index order) and each
+    # job's valid-task count: the batched placement pass turns admission
+    # rank + these into placement positions by pure arithmetic — no
+    # per-step sort over the task axis (DESIGN.md §8)
+    task_rank_in_job: jnp.ndarray  # int32 [n_tasks]
+    job_n_tasks: jnp.ndarray       # int32 [n_jobs]
     pkt_job: jnp.ndarray
     pkt_phase: jnp.ndarray
     pkt_bits: jnp.ndarray
@@ -93,6 +136,9 @@ class EngineConsts(NamedTuple):
     host_recover_t: jnp.ndarray  # f32 [n_hosts]
     link_fail_t: jnp.ndarray     # f32 [n_links]
     link_recover_t: jnp.ndarray  # f32 [n_links]
+    # the same instants concatenated ([2*n_hosts + 2*n_links], inf=never):
+    # the dt horizon mins over ONE tensor per step (DESIGN.md §8)
+    fail_breaks: jnp.ndarray
 
 
 class SimState(NamedTuple):
@@ -174,6 +220,9 @@ def make_consts(setup: SimSetup) -> tuple[EngineConsts, SimMeta]:
         task_mi=jnp.asarray(setup.task_mi),
         task_need=jnp.asarray(setup.task_need),
         task_valid=jnp.asarray(setup.task_valid),
+        task_rank_in_job=jnp.asarray(task_rank_in_job_np(setup.task_job)),
+        job_n_tasks=jnp.asarray(job_n_tasks_np(
+            setup.task_job, setup.task_valid, setup.n_jobs)),
         pkt_job=jnp.asarray(setup.pkt_job),
         pkt_phase=jnp.asarray(setup.pkt_phase),
         pkt_bits=jnp.asarray(setup.pkt_bits),
@@ -190,6 +239,7 @@ def make_consts(setup: SimSetup) -> tuple[EngineConsts, SimMeta]:
         host_recover_t=jnp.asarray(sched.host_recover_t, jnp.float32),
         link_fail_t=jnp.asarray(sched.link_fail_t, jnp.float32),
         link_recover_t=jnp.asarray(sched.link_recover_t, jnp.float32),
+        fail_breaks=jnp.asarray(sched.instants(), jnp.float32),
     )
     meta = SimMeta(
         n_nodes=cl.topo.n_nodes,
@@ -266,7 +316,7 @@ def _effective_link_bw(c: EngineConsts, meta, s: SimState) -> jnp.ndarray:
     return c.link_bw
 
 
-def _apply_failures(c: EngineConsts, pol, s: SimState) -> SimState:
+def _apply_failures(c: EngineConsts, meta, pol, s: SimState, cache):
     """Fire every fail/recover transition whose instant has been reached.
 
     Failure instants join the dt horizon (``_step``), so ``s.time`` lands
@@ -288,151 +338,219 @@ def _apply_failures(c: EngineConsts, pol, s: SimState) -> SimState:
     DONE work is never reverted (completed outputs are durable — the SAN
     holds T3 results, map outputs are re-fetchable); recovery instants need
     no transition, the masks simply clear.
+
+    The revert scans (per-packet route intersection, per-task host lookup)
+    only matter on the handful of steps where something newly died, so
+    they sit behind a ``lax.cond`` on the death delta — recovery-only and
+    steady-state steps just refresh the dead masks (DESIGN.md §8).
     """
     t = s.time
     host_dead = (c.host_fail_t <= t) & (t < c.host_recover_t)
     link_dead = (c.link_fail_t <= t) & (t < c.link_recover_t)
     new_h = host_dead & ~s.host_dead
     new_l = link_dead & ~s.link_dead
+    s = s._replace(host_dead=host_dead, link_dead=link_dead)
     restart = pol["recovery"] == RECOVERY_RESTART
 
-    # packets first: endpoints must resolve against the ACTIVATION-time
-    # placement, i.e. before any task unplaces below.
-    n_hosts_pad = c.host_fail_t.shape[0]
-    src_node, dst_node = _pkt_endpoints(c, s)
-    p_active = s.pkt_state == ACTIVE
-    links = _route_links(c, s, p_active)
-    route_hit = p_active & jnp.any(
-        (links >= 0) & new_l[jnp.maximum(links, 0)], axis=-1)
+    def transitions(args):
+        s, _ = args
+        # packets first: endpoints must resolve against the ACTIVATION-time
+        # placement, i.e. before any task unplaces below.
+        n_hosts_pad = c.host_fail_t.shape[0]
+        src_node, dst_node = _pkt_endpoints(c, s)
+        p_active = s.pkt_state == ACTIVE
+        links = _route_links(c, s, p_active)
+        route_hit = p_active & jnp.any(
+            (links >= 0) & new_l[jnp.maximum(links, 0)], axis=-1)
 
-    def _endpoint_died(node):
-        return (node < c.n_hosts) & new_h[jnp.clip(node, 0, n_hosts_pad - 1)]
+        def _endpoint_died(node):
+            return (node < c.n_hosts) & new_h[jnp.clip(node, 0,
+                                                       n_hosts_pad - 1)]
 
-    ep_hit = p_active & (_endpoint_died(src_node) | _endpoint_died(dst_node))
-    hit_p = route_hit | ep_hit
-    pkt_state = jnp.where(hit_p, WAITING, s.pkt_state)
-    pkt_rem = jnp.where(ep_hit & restart, c.pkt_bits.astype(jnp.float32),
-                        s.pkt_rem)
-    pkt_pair = jnp.where(hit_p, -1, s.pkt_pair)
-    pkt_cand = jnp.where(hit_p, -1, s.pkt_cand)
-    pkt_reroutes = s.pkt_reroutes + hit_p.astype(jnp.int32)
+        ep_hit = p_active & (_endpoint_died(src_node)
+                             | _endpoint_died(dst_node))
+        hit_p = route_hit | ep_hit
+        pkt_state = jnp.where(hit_p, WAITING, s.pkt_state)
+        pkt_rem = jnp.where(ep_hit & restart, c.pkt_bits.astype(jnp.float32),
+                            s.pkt_rem)
+        pkt_pair = jnp.where(hit_p, -1, s.pkt_pair)
+        pkt_cand = jnp.where(hit_p, -1, s.pkt_cand)
+        pkt_reroutes = s.pkt_reroutes + hit_p.astype(jnp.int32)
 
-    # tasks on newly-dead hosts
-    vm_safe = jnp.maximum(s.task_vm, 0)
-    task_host = jnp.clip(c.vm_host[vm_safe], 0, n_hosts_pad - 1)
-    hit_t = (c.task_valid & (s.task_vm >= 0) & new_h[task_host]
-             & ((s.task_state == ACTIVE) | (s.task_state == WAITING)))
-    task_state = jnp.where(hit_t, WAITING, s.task_state)
-    task_rem = jnp.where(hit_t & restart, c.task_mi.astype(jnp.float32),
-                         s.task_rem)
-    task_start = jnp.where(hit_t, jnp.nan, s.task_start)
-    vm_load = s.vm_load.at[vm_safe].add(-hit_t.astype(jnp.int32))
-    task_vm = jnp.where(hit_t, -1, s.task_vm)
-    task_restarts = s.task_restarts + hit_t.astype(jnp.int32)
+        # tasks on newly-dead hosts
+        vm_safe = jnp.maximum(s.task_vm, 0)
+        task_host = jnp.clip(c.vm_host[vm_safe], 0, n_hosts_pad - 1)
+        hit_t = (c.task_valid & (s.task_vm >= 0) & new_h[task_host]
+                 & ((s.task_state == ACTIVE) | (s.task_state == WAITING)))
+        task_state = jnp.where(hit_t, WAITING, s.task_state)
+        task_rem = jnp.where(hit_t & restart, c.task_mi.astype(jnp.float32),
+                             s.task_rem)
+        task_start = jnp.where(hit_t, jnp.nan, s.task_start)
+        vm_load = s.vm_load.at[vm_safe].add(-hit_t.astype(jnp.int32))
+        task_vm = jnp.where(hit_t, -1, s.task_vm)
+        task_restarts = s.task_restarts + hit_t.astype(jnp.int32)
 
-    return s._replace(
-        host_dead=host_dead, link_dead=link_dead,
-        pkt_state=pkt_state, pkt_rem=pkt_rem, pkt_pair=pkt_pair,
-        pkt_cand=pkt_cand, pkt_reroutes=pkt_reroutes,
-        task_state=task_state, task_rem=task_rem, task_start=task_start,
-        task_vm=task_vm, vm_load=vm_load, task_restarts=task_restarts)
+        s = s._replace(
+            pkt_state=pkt_state, pkt_rem=pkt_rem, pkt_pair=pkt_pair,
+            pkt_cand=pkt_cand, pkt_reroutes=pkt_reroutes,
+            task_state=task_state, task_rem=task_rem, task_start=task_start,
+            task_vm=task_vm, vm_load=vm_load, task_restarts=task_restarts)
+        # reverted packets left the active set -> re-derive the carried
+        # channel counts from scratch (transition steps are rare)
+        return s, _recount_channels(c, meta, s)
+
+    s, nc = jax.lax.cond(jnp.any(new_h) | jnp.any(new_l), transitions,
+                         lambda args: args, (s, cache["nc"]))
+    return s, {**cache, "nc": nc}
 
 
-def _admit_and_place(c: EngineConsts, meta, pol, s: SimState) -> SimState:
+def _place_batch(c: EngineConsts, meta, pol, aux, s: SimState, mine, pos,
+                 vm_live, n_live, kth) -> SimState:
+    """Place every task in ``mine`` preserving the sequential placement
+    order.  ``pos`` is each mine-task's 0-based position in that order
+    (garbage outside ``mine`` — masked here), computed by the caller with
+    prefix-sum arithmetic so no per-step sort is needed (DESIGN.md §8).
+
+    Round-robin and random placement need no load feedback, so their picks
+    are pure rank-plus-counter / hash arithmetic against the ``kth``
+    live-VM remap.  Least-used must see each earlier placement's load
+    bump, so it runs a compacted scan over the tasks-to-place only (loop
+    length = the live placement count, not the padded task axis)."""
+    n_t = mine.shape[0]
+    counter0 = s.place_counter
+    n_mine = jnp.sum(mine.astype(jnp.int32))
+    # order[k] = task id placed k-th (scatter-compaction inverse of pos)
+    order = jnp.zeros(n_t, jnp.int32).at[
+        jnp.where(mine, pos, n_t)].set(jnp.arange(n_t, dtype=jnp.int32),
+                                       mode="drop")
+    mod = jnp.maximum(n_live, 1)
+    h = aux["task_hash"]
+    rr_pick = kth[(counter0 + pos) % mod]
+    rnd_pick = kth[h % mod]
+    vec_pick = jnp.where(pol["placement"] == PLACE_ROUND_ROBIN,
+                         rr_pick, rnd_pick)
+
+    def place_vec(_):
+        task_vm = jnp.where(mine, vec_pick, s.task_vm)
+        vm_load = s.vm_load.at[
+            jnp.where(mine, vec_pick, meta.n_vms)].add(1, mode="drop")
+        return vm_load, task_vm
+
+    def place_scan(_):
+        imax = jnp.iinfo(jnp.int32).max
+
+        def place_one(k, carry):
+            vm_load, task_vm = carry
+            t = order[k]
+            pick = jnp.argmin(jnp.where(vm_live, vm_load, imax)
+                              ).astype(jnp.int32)
+            return vm_load.at[pick].add(1), task_vm.at[t].set(pick)
+
+        return jax.lax.fori_loop(0, n_mine, place_one,
+                                 (s.vm_load, s.task_vm))
+
+    # any placement id that is neither round-robin nor random falls to the
+    # load-feedback scan — same fallback the scalar kernel had
+    use_scan = ((pol["placement"] != PLACE_ROUND_ROBIN)
+                & (pol["placement"] != PLACE_RANDOM))
+    vm_load, task_vm = jax.lax.cond(use_scan, place_scan, place_vec, None)
+    return s._replace(vm_load=vm_load, task_vm=task_vm,
+                      place_counter=counter0 + n_mine)
+
+
+def _admit_and_place(c: EngineConsts, meta, pol, aux, s: SimState) -> SimState:
     """Admit released jobs (job-selection policy) while concurrency slots are
     free; place each admitted job's tasks onto VMs (placement policy).
 
+    Both halves are batched (DESIGN.md §8).  Admission: one stable sort of
+    the released jobs by the policy key (ties by job index, exactly the
+    repeated-argmin order of the scalar loop) admits the top
+    ``concurrency - running`` of them at once — each sequential admission
+    raised ``running`` by one, so the budget IS a rank cutoff.  Placement:
+    every newly-admitted job's tasks are placed in one ``_place_batch``
+    whose order key is the admission rank.
+
     With failures enabled, placement only considers VMs on LIVE hosts (the
-    ResourceManager's heartbeat view — DESIGN.md §7) and a second pass
+    ResourceManager's heartbeat view — DESIGN.md §7) and a second batch
     re-places unplaced tasks of already-admitted jobs (YARN re-execution
-    after a host loss)."""
+    after a host loss).
+
+    Returns ``(s, placed)``: the flag is True iff any task placement
+    changed this step — ``_step`` uses it to refresh the packet-endpoint
+    cache only when needed."""
     # live VM count (c.n_vms) may be smaller than the padded tensor length
     # in a packed multi-scenario sweep — pad slots must never win placement.
     n_vms = c.n_vms
-    vm_slot_live = jnp.arange(meta.n_vms) < n_vms
+    vm_live = jnp.arange(meta.n_vms) < n_vms
     if meta.has_failures:
-        vm_live = vm_slot_live & ~s.host_dead[
+        vm_live = vm_live & ~s.host_dead[
             jnp.clip(c.vm_host, 0, c.host_fail_t.shape[0] - 1)]
-        n_live = jnp.sum(vm_live.astype(jnp.int32))
-        # position of each live VM slot among the live ones, for the
-        # k-th-live remap (identical to `k` itself when nothing is dead,
-        # since pad slots sit at the tail)
-        live_pos = jnp.cumsum(vm_live.astype(jnp.int32)) - 1
-    else:
-        vm_live, n_live, live_pos = vm_slot_live, n_vms, None
+    n_live = jnp.sum(vm_live.astype(jnp.int32))
+    # k-th-live remap: kth[k] = slot index of the k-th live VM (prefix-sum
+    # compaction; the identity for k < n_vms when nothing is dead, since
+    # pad slots sit at the tail)
+    live_pos = jnp.cumsum(vm_live.astype(jnp.int32)) - 1
+    kth = jnp.zeros(meta.n_vms, jnp.int32).at[
+        jnp.where(vm_live, live_pos, meta.n_vms)].set(
+        jnp.arange(meta.n_vms, dtype=jnp.int32), mode="drop")
 
-    def pick_vm(vm_load, counter, h):
-        masked_load = jnp.where(vm_live, vm_load, jnp.iinfo(jnp.int32).max)
-        if meta.has_failures:
-            def kth_live(k):
-                return jnp.argmax(vm_live & (live_pos == k)).astype(jnp.int32)
-            rr = kth_live(counter % jnp.maximum(n_live, 1))
-            rnd = kth_live(h % jnp.maximum(n_live, 1))
-        else:
-            rr, rnd = counter % n_vms, h % n_vms
-        pick = jnp.where(
-            pol["placement"] == PLACE_ROUND_ROBIN, rr,
-            jnp.where(pol["placement"] == PLACE_RANDOM, rnd,
-                      jnp.argmin(masked_load).astype(jnp.int32)))
-        return pick.astype(jnp.int32)
+    n_j = s.job_admitted.shape[0]
+    released = (~s.job_admitted) & c.job_valid & (c.job_release <= s.time)
+    running = jnp.sum((s.job_admitted & (s.job_out_done < c.job_n_out)
+                       & c.job_valid).astype(jnp.int32))
+    slots = jnp.maximum(pol["job_concurrency"].astype(jnp.int32) - running, 0)
+    if meta.has_failures:
+        # no live NodeManager, no admission (the RM has nowhere to place):
+        # jobs wait for a host recovery breakpoint
+        slots = jnp.where(n_live > 0, slots, 0)
+    # job-selection key (smaller = better)
+    key = jnp.where(
+        pol["job_selection"] == JOBSEL_SJF, c.job_total_mi,
+        jnp.where(pol["job_selection"] == JOBSEL_PRIORITY,
+                  -c.job_priority, c.job_release))
+    key = jnp.where(released, key, _INF)
+    rank = jnp.zeros(n_j, jnp.int32).at[jnp.argsort(key)].set(
+        jnp.arange(n_j, dtype=jnp.int32))
+    admit_now = released & (rank < slots)
 
-    def place_mask(s: SimState, mine) -> SimState:
-        """Place every task in ``mine`` (ordered fori: round-robin counter
-        and least-used load must see earlier placements)."""
-        def place_one(t, carry):
-            vm_load, task_vm, counter = carry
-            is_mine = mine[t]
-            h = flow_hash_u32(jnp.int32(t), c.task_job[t], pol["seed"])
-            pick = pick_vm(vm_load, counter, h)
-            vm_load = jnp.where(is_mine, vm_load.at[pick].add(1), vm_load)
-            task_vm = jnp.where(is_mine, task_vm.at[t].set(pick), task_vm)
-            counter = counter + jnp.where(is_mine, 1, 0)
-            return vm_load, task_vm, counter
+    job_of_task = jnp.maximum(c.task_job, 0)
+    any_admit = jnp.any(admit_now)
 
-        vm_load, task_vm, counter = jax.lax.fori_loop(
-            0, s.task_vm.shape[0], place_one,
-            (s.vm_load, s.task_vm, s.place_counter))
-        return s._replace(vm_load=vm_load, task_vm=task_vm,
-                          place_counter=counter)
+    def admit_place(s: SimState) -> SimState:
+        # placement position of every admitted task by prefix-sum
+        # arithmetic (admission-rank-major, task-index-minor —
+        # DESIGN.md §8): offset each job's static task block by the task
+        # counts of better-ranked admitted jobs, then add the task's
+        # static rank within its job.
+        mine = c.task_valid & admit_now[job_of_task]
+        cnt_by_rank = jnp.zeros(n_j, jnp.int32).at[rank].set(
+            jnp.where(admit_now, c.job_n_tasks, 0))
+        off_by_rank = jnp.cumsum(cnt_by_rank) - cnt_by_rank  # exclusive
+        pos = off_by_rank[rank[job_of_task]] + c.task_rank_in_job
+        return _place_batch(c, meta, pol, aux, s, mine, pos, vm_live,
+                            n_live, kth)
 
-    def admit_one(_, s: SimState) -> SimState:
-        released = (~s.job_admitted) & c.job_valid & (c.job_release <= s.time)
-        running = s.job_admitted & (s.job_out_done < c.job_n_out) & c.job_valid
-        free = jnp.sum(running.astype(jnp.int32)) < pol["job_concurrency"]
-        any_wait = jnp.any(released)
-        # job-selection key (smaller = better)
-        key = jnp.where(
-            pol["job_selection"] == JOBSEL_SJF, c.job_total_mi,
-            jnp.where(pol["job_selection"] == JOBSEL_PRIORITY,
-                      -c.job_priority, c.job_release))
-        key = jnp.where(released, key, _INF)
-        j = jnp.argmin(key).astype(jnp.int32)
-        do = free & any_wait
-        if meta.has_failures:
-            # no live NodeManager, no admission (the RM has nowhere to
-            # place): the job waits for a host recovery breakpoint
-            do = do & (n_live > 0)
-
-        def place(s: SimState) -> SimState:
-            s = place_mask(s, (c.task_job == j) & c.task_valid)
-            return s._replace(
-                job_admitted=s.job_admitted.at[j].set(True),
-                job_admit_t=s.job_admit_t.at[j].set(s.time))
-
-        return jax.lax.cond(do, place, lambda s: s, s)
-
-    s = jax.lax.fori_loop(0, s.job_admitted.shape[0], admit_one, s)
+    s = jax.lax.cond(any_admit, admit_place, lambda s: s, s)
+    s = s._replace(job_admitted=s.job_admitted | admit_now,
+                   job_admit_t=jnp.where(admit_now, s.time, s.job_admit_t))
+    placed = any_admit
 
     if meta.has_failures:
         # re-place tasks a host failure unplaced (jobs already admitted);
         # with no live VM they stay unplaced and wait for a recovery.
         orphaned = (c.task_valid & (s.task_vm < 0)
                     & (s.task_state == WAITING)
-                    & s.job_admitted[jnp.maximum(c.task_job, 0)]
+                    & s.job_admitted[job_of_task]
                     & (n_live > 0))
-        s = jax.lax.cond(jnp.any(orphaned),
-                         lambda s: place_mask(s, orphaned), lambda s: s, s)
-    return s
+        s = jax.lax.cond(
+            jnp.any(orphaned),
+            lambda s: _place_batch(
+                c, meta, pol, aux, s, orphaned,
+                jnp.cumsum(orphaned.astype(jnp.int32)) - 1, vm_live,
+                n_live, kth),
+            lambda s: s, s)
+        placed = placed | jnp.any(orphaned)
+    return s, placed
 
 
 def _route_links(c: EngineConsts, s: SimState, mask: jnp.ndarray) -> jnp.ndarray:
@@ -462,9 +580,49 @@ def _pkt_endpoints(c: EngineConsts, s: SimState):
     return node_of(c.pkt_src_task), node_of(c.pkt_dst_task)
 
 
-def _activate(c: EngineConsts, meta, pol, s: SimState) -> SimState:
-    """Task activation (vectorized) then packet activation (ordered fori —
-    the controller serializes arrivals; each sees earlier channel counts)."""
+def _endpoint_cache(c: EngineConsts, meta, s: SimState):
+    """Per-packet (src*n_nodes+dst) pair index and reachability, derived
+    purely from the current task placement.  Placement changes on only a
+    handful of steps (admissions, failure re-placements), so ``_step``
+    keeps this in the while-loop carry and refreshes it under a
+    ``lax.cond`` instead of re-resolving every event (DESIGN.md §8).
+
+    Packets whose endpoint task is currently UNPLACED get a garbage pair —
+    harmless: with failures enabled ``_activate``'s ``_ep_placed`` check
+    (which reads ``task_vm`` live) blocks them, and without failures every
+    valid task of an admitted job is placed at admission."""
+    src_node, dst_node = _pkt_endpoints(c, s)
+    pair = (src_node * meta.n_nodes + dst_node).astype(jnp.int32)
+    # unreachable pairs (no candidate route, different nodes) never
+    # activate -> the engine reports a stall instead of free transfer
+    reachable = (c.n_cand[pair] > 0) | (src_node == dst_node)
+    return {"pair": pair, "reachable": reachable}
+
+
+def _recount_channels(c: EngineConsts, meta, s: SimState) -> jnp.ndarray:
+    """nc from scratch — the ground truth the incremental carry tracks."""
+    p_active = s.pkt_state == ACTIVE
+    return fairshare.channel_counts(_route_links(c, s, p_active), p_active,
+                                    meta.n_links)
+
+
+def _activate(c: EngineConsts, meta, pol, aux, cache, s: SimState):
+    """Task activation then packet activation, both batched (DESIGN.md §8).
+
+    The controller serializes packet arrivals — each SDN pick must see the
+    channels admitted just before it — so activation scans a COMPACTED
+    ready set (loop length = the live ready count, not the padded packet
+    axis; index order preserved).  The legacy hash route needs no channel
+    feedback: its picks are computed vectorially up front and the scan
+    merely applies them while counting channels (a per-ready-packet
+    update beats a packet-axis scatter on CPU for typical burst sizes).
+    Steps where nothing becomes ready skip the routing work altogether
+    (``lax.cond`` on the ready count).
+
+    Returns ``(s, links, p_active, nc, link_bw)`` — the post-activation
+    route-link tensor, active mask, per-link channel counts and effective
+    link bandwidth are each computed ONCE here and threaded through rates
+    and energy (the fused per-step network pass)."""
     # tasks: all inputs arrived
     t_ready = ((s.task_state == WAITING) & (s.task_got >= c.task_need)
                & (s.task_vm >= 0))
@@ -472,19 +630,15 @@ def _activate(c: EngineConsts, meta, pol, s: SimState) -> SimState:
     task_start = jnp.where(t_ready, s.time, s.task_start)
     s = s._replace(task_state=task_state, task_start=task_start)
 
-    # packets: job admitted & gate task done
+    # packets: job admitted & gate task done & endpoints routable (the
+    # pair/reachability tensors come from the placement-change cache)
     gate = c.pkt_gate_task
     gate_ok = jnp.where(gate < 0, True,
                         s.task_state[jnp.maximum(gate, 0)] == DONE)
     admitted = s.job_admitted[jnp.maximum(c.pkt_job, 0)]
     p_ready = (s.pkt_state == WAITING) & admitted & gate_ok & c.pkt_valid
-    src_node, dst_node = _pkt_endpoints(c, s)
-    n_nodes = meta.n_nodes
-    # unreachable pairs (no candidate route, different nodes) never
-    # activate -> the engine reports a stall instead of free transfer
-    pair_all = (src_node * n_nodes + dst_node).astype(jnp.int32)
-    reachable = (c.n_cand[pair_all] > 0) | (src_node == dst_node)
-    p_ready = p_ready & reachable
+    pair_all = cache["pair"]
+    p_ready = p_ready & cache["reachable"]
     if meta.has_failures:
         # a packet whose endpoint task was unplaced by a host failure must
         # wait for re-placement — its endpoints cannot resolve yet
@@ -500,55 +654,74 @@ def _activate(c: EngineConsts, meta, pol, s: SimState) -> SimState:
                    & _ep_placed(c.pkt_dst_task))
 
     link_bw = _effective_link_bw(c, meta, s)
-    ch0 = fairshare.channel_counts(
-        _route_links(c, s, s.pkt_state == ACTIVE), s.pkt_state == ACTIVE,
-        meta.n_links)
 
-    def act_one(i, carry):
-        pkt_state, pkt_pair, pkt_cand, pkt_start, ch = carry
-        ready = p_ready[i]
-        pair = (src_node[i] * n_nodes + dst_node[i]).astype(jnp.int32)
+    def activate_ready(args):
+        s, nc = args
         # legacy flow = task-to-task connection (§4: "task-to-task
-        # communication"); each flow picks its equal-hop route independently
-        # at random and keeps it (§5.2).
-        fh = flow_hash_u32(c.pkt_src_task[i] + 1, c.pkt_dst_task[i] + 1,
-                           pol["seed"])
-        # SDN's global view includes link liveness (link_bw has dead links
-        # at 0, so their candidates lose the bottleneck argmax); the legacy
+        # communication"); each flow picks its equal-hop route
+        # independently at random and keeps it (§5.2).  No channel
+        # feedback -> one shot (the flow hash is loop-invariant,
+        # precomputed in ``aux``).
+        legacy_cand = legacy_route_choice(c.n_cand[pair_all],
+                                          aux["pkt_hash"])
+        n_ready = jnp.sum(p_ready.astype(jnp.int32))
+        is_sdn = pol["routing"] == ROUTE_SDN
+
+        # one scan over the ready set only, in packet-index order (the
+        # argmax-chain pops the first set bit each iteration — no sort,
+        # no packet-axis scatter).  The carried ``nc`` doubles as the
+        # controller's live view: each SDN pick sees the channels
+        # admitted just before it, and the final value IS the
+        # post-activation channel count (DESIGN.md §8).  SDN's global
+        # view includes link liveness (link_bw has dead links at 0, so
+        # their candidates lose the bottleneck argmax); the legacy
         # static hash is failure-blind and can re-pin the dead route.
-        cand = choose_route(pol["routing"], c.routes[pair], c.n_cand[pair],
-                            link_bw, ch, fh)
-        links = c.routes[pair, cand]
-        valid = links >= 0
-        ch_new = ch.at[jnp.maximum(links, 0)].add(valid.astype(jnp.int32))
+        def act_one(_, carry):
+            ch, cand_all, mask = carry
+            i = jnp.argmax(mask).astype(jnp.int32)
+            mask = mask.at[i].set(False)
+            pair = pair_all[i]
+            cand = jnp.where(
+                is_sdn,
+                sdn_route_choice(c.routes[pair], c.n_cand[pair], link_bw,
+                                 ch),
+                legacy_cand[i])
+            links = c.routes[pair, cand]
+            ch = ch.at[jnp.maximum(links, 0)].add(
+                (links >= 0).astype(jnp.int32))
+            return ch, cand_all.at[i].set(cand), mask
+
+        nc, cand, _ = jax.lax.fori_loop(0, n_ready, act_one,
+                                        (nc, legacy_cand, p_ready))
+
         if meta.has_failures:
             # a failure-reverted packet re-activates but keeps its FIRST
             # start: its measured duration includes the outage
-            start_val = jnp.where(jnp.isnan(pkt_start[i]), s.time,
-                                  pkt_start[i])
+            start_val = jnp.where(jnp.isnan(s.pkt_start), s.time,
+                                  s.pkt_start)
         else:
-            start_val = s.time
-        return (
-            jnp.where(ready, pkt_state.at[i].set(ACTIVE), pkt_state),
-            jnp.where(ready, pkt_pair.at[i].set(pair), pkt_pair),
-            jnp.where(ready, pkt_cand.at[i].set(cand), pkt_cand),
-            jnp.where(ready, pkt_start.at[i].set(start_val), pkt_start),
-            jnp.where(ready, ch_new, ch),
-        )
+            start_val = jnp.broadcast_to(s.time, s.pkt_start.shape)
+        return s._replace(
+            pkt_state=jnp.where(p_ready, ACTIVE, s.pkt_state),
+            pkt_pair=jnp.where(p_ready, pair_all, s.pkt_pair),
+            pkt_cand=jnp.where(p_ready, cand, s.pkt_cand),
+            pkt_start=jnp.where(p_ready, start_val, s.pkt_start)), nc
 
-    pkt_state, pkt_pair, pkt_cand, pkt_start, _ = jax.lax.fori_loop(
-        0, s.pkt_state.shape[0], act_one,
-        (s.pkt_state, s.pkt_pair, s.pkt_cand, s.pkt_start, ch0))
-    return s._replace(pkt_state=pkt_state, pkt_pair=pkt_pair,
-                      pkt_cand=pkt_cand, pkt_start=pkt_start)
+    s, nc = jax.lax.cond(jnp.any(p_ready), activate_ready,
+                         lambda args: args, (s, cache["nc"]))
 
-
-def _rates(c: EngineConsts, meta, pol, s: SimState):
     p_active = s.pkt_state == ACTIVE
     links = _route_links(c, s, p_active)
-    pkt_rate = fairshare.rates(pol["traffic"], links, p_active,
-                               _effective_link_bw(c, meta, s),
-                               meta.intra_bw)
+    return s, links, p_active, nc, link_bw
+
+
+def _rates(c: EngineConsts, meta, pol, s: SimState, links, p_active,
+           nc, link_bw):
+    """Piecewise-constant packet/task rates from the fused network tensors
+    (``links``/``p_active``/``nc``/``link_bw`` come straight from
+    ``_activate`` — nothing here is recomputed, DESIGN.md §8)."""
+    pkt_rate = fairshare.rates(pol["traffic"], links, p_active, link_bw,
+                               meta.intra_bw, nc=nc)
     t_active = s.task_state == ACTIVE
     vm = jnp.maximum(s.task_vm, 0)
     n_on_vm = jnp.zeros_like(c.vm_total_mips, jnp.int32).at[vm].add(
@@ -562,7 +735,7 @@ def _rates(c: EngineConsts, meta, pol, s: SimState):
             s.host_dead[jnp.clip(c.vm_host[vm], 0,
                                  c.host_fail_t.shape[0] - 1)],
             0.0, task_rate)
-    return pkt_rate, task_rate, links, p_active, t_active
+    return pkt_rate, task_rate, t_active
 
 
 def _finished(c: EngineConsts, meta, s: SimState) -> jnp.ndarray:
@@ -570,12 +743,38 @@ def _finished(c: EngineConsts, meta, s: SimState) -> jnp.ndarray:
     return all_done | s.stalled | (s.steps >= meta.max_steps)
 
 
-def _step(c: EngineConsts, meta, pol, s: SimState) -> SimState:
+def _make_aux(c: EngineConsts, pol) -> Dict[str, jnp.ndarray]:
+    """Loop-invariant tensors hoisted out of the step body (DESIGN.md §8):
+    the per-task placement hash and the per-packet legacy flow hash only
+    depend on consts + the policy seed, so they are computed once before
+    the while loop instead of every event."""
+    n_t = c.task_job.shape[0]
+    return {
+        "task_hash": flow_hash_u32(jnp.arange(n_t, dtype=jnp.int32),
+                                   c.task_job, pol["seed"]),
+        "pkt_hash": flow_hash_u32(c.pkt_src_task + 1, c.pkt_dst_task + 1,
+                                  pol["seed"]),
+        # completion tolerances (also loop-invariant)
+        "pkt_tol": c.pkt_bits * 1e-6 + 1.0,
+        "task_tol": c.task_mi * 1e-6 + 1e-6,
+    }
+
+
+def _step(c: EngineConsts, meta, pol, aux, carry):
+    s, cache = carry
     if meta.has_failures:
-        s = _apply_failures(c, pol, s)
-    s = _admit_and_place(c, meta, pol, s)
-    s = _activate(c, meta, pol, s)
-    pkt_rate, task_rate, links, p_active, t_active = _rates(c, meta, pol, s)
+        s, cache = _apply_failures(c, meta, pol, s, cache)
+    s, placed = _admit_and_place(c, meta, pol, aux, s)
+    # placement changed -> the packet endpoint/pair cache is stale
+    cache = jax.lax.cond(placed,
+                         lambda: {**cache, **_endpoint_cache(c, meta, s)},
+                         lambda: cache)
+    # the fused network pass: route links, active mask, channel counts and
+    # effective bandwidth come out of activation ONCE per step and feed
+    # rates + energy below (DESIGN.md §8)
+    s, links, p_active, nc, link_bw = _activate(c, meta, pol, aux, cache, s)
+    pkt_rate, task_rate, t_active = _rates(c, meta, pol, s, links, p_active,
+                                           nc, link_bw)
 
     # earliest horizon (Eq. 4 generalized)
     dt_p = jnp.min(jnp.where(p_active & (pkt_rate > 0),
@@ -588,13 +787,10 @@ def _step(c: EngineConsts, meta, pol, s: SimState) -> SimState:
     if meta.has_failures:
         # fail/recover instants are rate breakpoints exactly like job
         # releases — they join the analytic min, no event heap needed
-        # (DESIGN.md §7)
-        def _next(ts):
-            return jnp.min(jnp.where(ts > s.time, ts - s.time, _INF))
-
-        dt_f = jnp.minimum(
-            jnp.minimum(_next(c.host_fail_t), _next(c.host_recover_t)),
-            jnp.minimum(_next(c.link_fail_t), _next(c.link_recover_t)))
+        # (DESIGN.md §7); ``fail_breaks`` is the four schedule tensors
+        # pre-concatenated so this is ONE masked min (DESIGN.md §8)
+        dt_f = jnp.min(jnp.where(c.fail_breaks > s.time,
+                                 c.fail_breaks - s.time, _INF))
         dt = jnp.minimum(dt, dt_f)
     stalled = jnp.isinf(dt)
     dt = jnp.where(stalled, 0.0, dt)
@@ -609,8 +805,7 @@ def _step(c: EngineConsts, meta, pol, s: SimState) -> SimState:
         util = jnp.where(s.host_dead, 0.0, util)  # dead hosts draw 0 W
     host_energy = s.host_energy + host_power(util, meta.energy) * dt
     host_busy = s.host_busy + jnp.where(util > 0, dt, 0.0)
-    ch = fairshare.channel_counts(links, p_active, meta.n_links)
-    live_link = (ch > 0).astype(jnp.int32)
+    live_link = (nc > 0).astype(jnp.int32)
     if meta.has_failures:
         live_link = jnp.where(s.link_dead, 0, live_link)  # port is down
     node_ports = jnp.zeros(meta.n_nodes, jnp.int32)
@@ -642,23 +837,41 @@ def _step(c: EngineConsts, meta, pol, s: SimState) -> SimState:
     time = s.time + dt
     pkt_rem = jnp.where(p_active, s.pkt_rem - pkt_rate * dt, s.pkt_rem)
     task_rem = jnp.where(t_active, s.task_rem - task_rate * dt, s.task_rem)
-    pkt_tol = c.pkt_bits * 1e-6 + 1.0
-    task_tol = c.task_mi * 1e-6 + 1e-6
-    p_done_now = p_active & (pkt_rem <= pkt_tol)
-    t_done_now = t_active & (task_rem <= task_tol)
+    p_done_now = p_active & (pkt_rem <= aux["pkt_tol"])
+    t_done_now = t_active & (task_rem <= aux["task_tol"])
 
     pkt_state = jnp.where(p_done_now, DONE, s.pkt_state)
     pkt_finish = jnp.where(p_done_now, time, s.pkt_finish)
     task_state = jnp.where(t_done_now, DONE, s.task_state)
     task_finish = jnp.where(t_done_now, time, s.task_finish)
 
-    # completions feed gates
-    feeds = jnp.maximum(c.pkt_feeds_task, 0)
-    task_got = s.task_got.at[feeds].add(
-        (p_done_now & (c.pkt_feeds_task >= 0)).astype(jnp.int32))
-    out_pkt = p_done_now & (c.pkt_feeds_task < 0)
-    job_of = jnp.maximum(c.pkt_job, 0)
-    job_out_done = s.job_out_done.at[job_of].add(out_pkt.astype(jnp.int32))
+    # completions feed gates + release their channels.  Only a handful of
+    # packets finish per event, so this is an argmax-chain scan over the
+    # done set instead of three packet-axis scatters (DESIGN.md §8); the
+    # carried ``nc`` stays exact (integer adds mirror activation's).
+    n_t_pad = s.task_got.shape[0]
+    n_j_pad = s.job_out_done.shape[0]
+    n_done = jnp.sum(p_done_now.astype(jnp.int32))
+
+    def complete_one(_, carry):
+        nc_c, task_got, job_out_done, mask = carry
+        i = jnp.argmax(mask).astype(jnp.int32)
+        mask = mask.at[i].set(False)
+        links_i = c.routes[jnp.maximum(s.pkt_pair[i], 0),
+                           jnp.maximum(s.pkt_cand[i], 0)]
+        nc_c = nc_c.at[jnp.maximum(links_i, 0)].add(
+            -(links_i >= 0).astype(jnp.int32))
+        feeds_i = c.pkt_feeds_task[i]
+        task_got = task_got.at[
+            jnp.where(feeds_i >= 0, feeds_i, n_t_pad)].add(1, mode="drop")
+        job_out_done = job_out_done.at[
+            jnp.where(feeds_i < 0, jnp.maximum(c.pkt_job[i], 0), n_j_pad)
+        ].add(1, mode="drop")
+        return nc_c, task_got, job_out_done, mask
+
+    nc_next, task_got, job_out_done, _ = jax.lax.fori_loop(
+        0, n_done, complete_one,
+        (nc, s.task_got, s.job_out_done, p_done_now))
     newly_job_done = (job_out_done >= c.job_n_out) & \
         (s.job_out_done < c.job_n_out) & c.job_valid
     job_done_t = jnp.where(newly_job_done, time, s.job_done_t)
@@ -671,7 +884,8 @@ def _step(c: EngineConsts, meta, pol, s: SimState) -> SimState:
         task_finish=task_finish,
         pkt_state=pkt_state, pkt_rem=pkt_rem, pkt_finish=pkt_finish,
         vm_load=vm_load, host_energy=host_energy, host_busy=host_busy,
-        switch_energy=switch_energy, job_downtime=job_downtime)
+        switch_energy=switch_energy, job_downtime=job_downtime), \
+        {**cache, "nc": nc_next}
 
 
 # ---------------------------------------------------------------------------
@@ -680,29 +894,52 @@ def _step(c: EngineConsts, meta, pol, s: SimState) -> SimState:
 
 
 def make_packed_simulator(meta):
-    """Returns ``run(consts, policy_dict) -> SimState`` with consts as an
-    ARGUMENT, so a heterogeneous-scenario sweep can vmap over consts and
-    policies together (see ``repro.scenarios.sweep``, DESIGN.md §5).
+    """Returns ``run(consts, policy_dict, s0=None) -> SimState`` with consts
+    as an ARGUMENT, so a heterogeneous-scenario sweep can vmap over consts
+    and policies together (see ``repro.scenarios.sweep``, DESIGN.md §5).
 
     ``meta`` is a ``SimMeta`` (a legacy meta dict is coerced): only static
     shapes + scalar params shared by every replica in the batch (padded
     maxima for a packed sweep).
+
+    ``s0`` lets a caller pass the t=0 state in as a real argument —
+    ``repro.api.runners`` builds it outside the jitted loop and DONATES its
+    buffers, so XLA aliases them straight into the while-loop carry instead
+    of materializing a second copy (DESIGN.md §8).  ``None`` derives it
+    from consts, which is always equivalent.
+
+    The finished flag rides in the loop carry: ``_finished`` is evaluated
+    once per body on the advanced state instead of once in ``cond`` and
+    again in ``body``, and the body is one ``lax.cond`` on the carried
+    flag — a finished replica in a vmapped batch passes its state through
+    (the batching rule turns the cond into the old per-leaf select), while
+    an unbatched run skips even the selects.
     """
     meta = SimMeta.coerce(meta)
 
-    def run(consts: EngineConsts, pol: Dict[str, jnp.ndarray]) -> SimState:
-        s0 = init_state_from_consts(consts, meta.n_switches)
+    def run(consts: EngineConsts, pol: Dict[str, jnp.ndarray],
+            s0: SimState | None = None) -> SimState:
+        if s0 is None:
+            s0 = init_state_from_consts(consts, meta.n_switches)
+        aux = _make_aux(consts, pol)
+        # nothing is active at t=0, so the carried channel counts start 0
+        cache0 = {**_endpoint_cache(consts, meta, s0),
+                  "nc": jnp.zeros(meta.n_links, jnp.int32)}
 
-        def cond(s):
-            return ~_finished(consts, meta, s)
+        def cond(carry):
+            _, _, done = carry
+            return ~done
 
-        def body(s):
-            new = _step(consts, meta, pol, s)
-            live = ~_finished(consts, meta, s)
-            return jax.tree_util.tree_map(
-                lambda n, o: jnp.where(live, n, o), new, s)
+        def body(carry):
+            s, cache, done = carry
+            s, cache = jax.lax.cond(
+                done, lambda sc: sc,
+                lambda sc: _step(consts, meta, pol, aux, sc), (s, cache))
+            return s, cache, _finished(consts, meta, s)
 
-        return jax.lax.while_loop(cond, body, s0)
+        s_final, _, _ = jax.lax.while_loop(
+            cond, body, (s0, cache0, _finished(consts, meta, s0)))
+        return s_final
 
     return run
 

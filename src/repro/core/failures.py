@@ -55,6 +55,17 @@ class FailureSchedule:
             self.host_fail_t, self.host_recover_t,
             self.link_fail_t, self.link_recover_t)))
 
+    def instants(self) -> np.ndarray:
+        """All fail/recover instants as ONE f32 tensor (``inf`` = never),
+        shape ``[2*n_hosts + 2*n_links]`` — fixed by the topology, not by
+        the outage count, so schedules differing only in how many outages
+        they carry keep identical tensor shapes (and therefore share jit
+        caches).  The engine mins over this single tensor per step instead
+        of over the four device tensors separately (DESIGN.md §8)."""
+        return np.concatenate([self.host_fail_t, self.host_recover_t,
+                               self.link_fail_t, self.link_recover_t]
+                              ).astype(np.float32)
+
     def validate(self, n_hosts: int, n_links: int) -> "FailureSchedule":
         assert self.host_fail_t.shape == (n_hosts,), \
             f"host_fail_t shape {self.host_fail_t.shape} != ({n_hosts},)"

@@ -31,16 +31,23 @@ def channel_counts(route_links: jnp.ndarray, active: jnp.ndarray,
 
 
 def eq3_rates(route_links: jnp.ndarray, active: jnp.ndarray,
-              link_bw: jnp.ndarray, intra_bw: float) -> jnp.ndarray:
+              link_bw: jnp.ndarray, intra_bw: float,
+              nc: jnp.ndarray | None = None) -> jnp.ndarray:
     """Paper Eq. 3 rate for every packet (0 for inactive).
 
     Packets with an empty route (src host == dst host) move at ``intra_bw``.
+    ``nc`` takes the per-link channel counts precomputed by the engine's
+    fused network pass (DESIGN.md §8); ``None`` recomputes them here.
     """
-    nc = channel_counts(route_links, active, link_bw.shape[0])
+    if nc is None:
+        nc = channel_counts(route_links, active, link_bw.shape[0])
     valid = route_links >= 0
     safe = jnp.maximum(route_links, 0)
-    share = link_bw[safe] / jnp.maximum(nc[safe], 1).astype(link_bw.dtype)
-    share = jnp.where(valid, share, jnp.inf)
+    # per-LINK share first (tiny link axis), then one gather onto the
+    # packet axis — same float op on the same operands as dividing after
+    # the gather, one packet-scale op cheaper (DESIGN.md §8)
+    share_l = link_bw / jnp.maximum(nc, 1).astype(link_bw.dtype)
+    share = jnp.where(valid, share_l[safe], jnp.inf)
     bot = jnp.min(share, axis=-1)
     bot = jnp.where(jnp.isinf(bot), jnp.asarray(intra_bw, link_bw.dtype), bot)
     return jnp.where(active, bot, 0.0)
@@ -103,10 +110,15 @@ def waterfill_rates(route_links: jnp.ndarray, active: jnp.ndarray,
 
 
 def rates(policy: jnp.ndarray, route_links: jnp.ndarray, active: jnp.ndarray,
-          link_bw: jnp.ndarray, intra_bw: float) -> jnp.ndarray:
-    """Dispatch on traffic policy (vmap-safe lax.cond)."""
+          link_bw: jnp.ndarray, intra_bw: float,
+          nc: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Dispatch on traffic policy (vmap-safe lax.cond).
+
+    ``nc`` is the optional precomputed channel-count tensor for the Eq. 3
+    branch (water-filling recomputes per-link live counts each fill
+    iteration, so it has no use for a one-shot count)."""
     return jax.lax.cond(
         policy == TRAFFIC_WATERFILL,
         lambda: waterfill_rates(route_links, active, link_bw, intra_bw),
-        lambda: eq3_rates(route_links, active, link_bw, intra_bw),
+        lambda: eq3_rates(route_links, active, link_bw, intra_bw, nc=nc),
     )

@@ -157,19 +157,34 @@ def candidate_bottleneck_bw(routes_k: jnp.ndarray, n_cand: jnp.ndarray,
     return jnp.where(k_ids < n_cand, bot, -jnp.inf)
 
 
+def sdn_route_choice(routes_k: jnp.ndarray, n_cand: jnp.ndarray,
+                     link_bw: jnp.ndarray,
+                     ch_count: jnp.ndarray) -> jnp.ndarray:
+    """SDN pick for ONE pair: argmax of current bottleneck availability
+    (Dijkstra objective #2).  Depends on the live channel counts, so the
+    engine evaluates it inside the compacted ready-set scan — each
+    activation sees the channels the controller just admitted."""
+    bw = candidate_bottleneck_bw(routes_k, n_cand, link_bw, ch_count)
+    return jnp.argmax(bw).astype(jnp.int32)
+
+
+def legacy_route_choice(n_cand: jnp.ndarray,
+                        flow_hash: jnp.ndarray) -> jnp.ndarray:
+    """Legacy pick: deterministic hash of the flow id over the equal-hop
+    set — fixed for the whole flow regardless of load.  Needs no channel
+    feedback, so it vectorizes over any batch of pairs (DESIGN.md §8)."""
+    return jnp.where(n_cand > 0, flow_hash % jnp.maximum(n_cand, 1),
+                     0).astype(jnp.int32)
+
+
 def choose_route(policy: jnp.ndarray, routes_k: jnp.ndarray,
                  n_cand: jnp.ndarray, link_bw: jnp.ndarray,
                  ch_count: jnp.ndarray, flow_hash: jnp.ndarray) -> jnp.ndarray:
-    """Pick a candidate index per the active routing policy.
-
-    LEGACY: deterministic hash of the flow id over the equal-hop set — the
-            route is fixed for the whole flow regardless of load.
-    SDN   : argmax of current bottleneck availability (Dijkstra objective #2).
-    """
-    bw = candidate_bottleneck_bw(routes_k, n_cand, link_bw, ch_count)
-    sdn_pick = jnp.argmax(bw)
-    legacy_pick = jnp.where(n_cand > 0, flow_hash % jnp.maximum(n_cand, 1), 0)
-    return jnp.where(policy == ROUTE_SDN, sdn_pick, legacy_pick).astype(jnp.int32)
+    """Pick a candidate index for ONE pair per the active routing policy
+    (see ``sdn_route_choice`` / ``legacy_route_choice``)."""
+    return jnp.where(policy == ROUTE_SDN,
+                     sdn_route_choice(routes_k, n_cand, link_bw, ch_count),
+                     legacy_route_choice(n_cand, flow_hash)).astype(jnp.int32)
 
 
 def flow_hash_u32(a: jnp.ndarray, b: jnp.ndarray, seed: jnp.ndarray) -> jnp.ndarray:

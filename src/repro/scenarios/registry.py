@@ -24,7 +24,8 @@ from ..core.topology import (Topology, canonical_tree, fat_tree, leaf_spine,
 from ..core.usecase import (HOST_CORES, HOST_MIPS, VM_CORES, VM_CORE_MIPS,
                             paper_jobs)
 from .failures import random_failures
-from .workloads import bursty_workload, uniform_workload, zipf_workload
+from .workloads import (JobTemplate, bursty_workload, uniform_workload,
+                        zipf_workload)
 
 
 def make_cluster(topo: Topology, vms_per_host: int = 1,
@@ -178,6 +179,29 @@ def _leaf_spine_failures(n_spine: int = 4, n_leaf: int = 4,
         failures=lambda topo: random_failures(
             topo, link_rate=link_rate, mttr=mttr, horizon=horizon,
             seed=seed),
+    )
+
+
+@register("leaf-spine-xl")
+def _leaf_spine_xl(n_spine: int = 8, n_leaf: int = 16, hosts_per_leaf: int = 8,
+                   seed: int = 0, n_jobs: int = 128, max_scale: float = 8.0,
+                   k_max: int = 8) -> Scenario:
+    """Data-center-scale leaf-spine Clos (the scale Kreutz et al. argue
+    controller evaluation needs): 128 hosts, 24 switches, a 128-job Zipf
+    mix lowering to >=1k tasks and >=4k packets.  The step-kernel scaling
+    benchmark (``benchmarks/engine_profile.py``, DESIGN.md §8) — too big
+    for the old sequential admission/activation loops, sized so the
+    vectorized kernel's per-step cost is dominated by tensor ops."""
+    template = JobTemplate(n_map=8, n_reduce=3)
+    return Scenario(
+        name=f"leaf-spine-xl-{n_spine}x{n_leaf}x{hosts_per_leaf}",
+        topology=lambda: leaf_spine(n_spine, n_leaf, hosts_per_leaf),
+        workload=lambda: zipf_workload(n_jobs=n_jobs, seed=seed,
+                                       template=template,
+                                       max_scale=max_scale),
+        description="128-host leaf-spine Clos, 128-job Zipf mix "
+                    "(engine_profile scaling tier)",
+        k_max=k_max,
     )
 
 

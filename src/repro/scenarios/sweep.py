@@ -36,7 +36,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.engine import (EngineConsts, NODE_OFFSET, default_max_steps,
-                           job_valid_mask)
+                           job_n_tasks_np, job_valid_mask,
+                           task_rank_in_job_np)
 from ..core.failures import no_failures
 from ..core.mapreduce import SimSetup
 from ..core.policies import as_policy_arrays, policy_field_names
@@ -82,6 +83,21 @@ def _pack_one(setup: SimSetup, dims: Dict[str, int]) -> Dict[str, np.ndarray]:
     n_cand = np.zeros((Nn * Nn,), np.int32)
     n_cand[new_pair] = rt.n_cand
 
+    # failure schedule (DESIGN.md §7): pad hosts/links never fail; the
+    # concatenated breakpoint tensor (DESIGN.md §8) is rebuilt from the
+    # PADDED windows so its layout matches ``FailureSchedule.instants``
+    # at the padded dims
+    sched_pad = {
+        "host_fail_t": _pad1(np.asarray(sched.host_fail_t, np.float32),
+                             H, np.inf),
+        "host_recover_t": _pad1(np.asarray(sched.host_recover_t, np.float32),
+                                H, np.inf),
+        "link_fail_t": _pad1(np.asarray(sched.link_fail_t, np.float32),
+                             L, np.inf),
+        "link_recover_t": _pad1(np.asarray(sched.link_recover_t, np.float32),
+                                L, np.inf),
+    }
+
     cl = setup.cluster
     return {
         "routes": routes,
@@ -118,6 +134,10 @@ def _pack_one(setup: SimSetup, dims: Dict[str, int]) -> Dict[str, np.ndarray]:
                            dims["n_tasks"], 0),
         "task_valid": _pad1(np.asarray(setup.task_valid), dims["n_tasks"],
                             False),
+        "task_rank_in_job": task_rank_in_job_np(
+            _pad1(np.asarray(setup.task_job, np.int32), dims["n_tasks"], -1)),
+        "job_n_tasks": job_n_tasks_np(setup.task_job, setup.task_valid,
+                                      dims["n_jobs"]),
         "pkt_job": _pad1(np.asarray(setup.pkt_job, np.int32),
                          dims["n_packets"], -1),
         "pkt_phase": _pad1(np.asarray(setup.pkt_phase, np.int8),
@@ -138,15 +158,10 @@ def _pack_one(setup: SimSetup, dims: Dict[str, int]) -> Dict[str, np.ndarray]:
         "n_switches": np.int32(n_sw),
         "storage_node": node_map(cl.storage_node)[()],
         "n_vms": np.int32(cl.vm_host.shape[0]),
-        # failure schedule (DESIGN.md §7): pad hosts/links never fail
-        "host_fail_t": _pad1(np.asarray(sched.host_fail_t, np.float32),
-                             H, np.inf),
-        "host_recover_t": _pad1(np.asarray(sched.host_recover_t, np.float32),
-                                H, np.inf),
-        "link_fail_t": _pad1(np.asarray(sched.link_fail_t, np.float32),
-                             L, np.inf),
-        "link_recover_t": _pad1(np.asarray(sched.link_recover_t, np.float32),
-                                L, np.inf),
+        **sched_pad,
+        "fail_breaks": np.concatenate([
+            sched_pad["host_fail_t"], sched_pad["host_recover_t"],
+            sched_pad["link_fail_t"], sched_pad["link_recover_t"]]),
     }
 
 
