@@ -5,7 +5,10 @@ Three size tiers — small (the paper's §5 fabric), medium (a 16-host
 leaf-spine Clos) and large (``leaf-spine-xl``: 128 hosts, >=1k tasks,
 >=4k packets) — each run as a single compiled simulation, timed after an
 explicit ``jax.block_until_ready`` so wall numbers measure compute, not
-dispatch.  A small vmapped policy batch per tier reports sims/s.
+dispatch.  A small vmapped policy batch per tier reports sims/s, and the
+fleet path (DESIGN.md §9) is profiled at several cohort widths
+(``--widths 1,6,32``), each entry carrying ``batch_efficiency`` =
+fleet sims/s ÷ serial sims/s.
 
 The JSON report (``--json experiments/BENCH_engine.json``) is the
 committed perf trajectory; CI re-runs the profile and fails when steps/s
@@ -36,17 +39,21 @@ from repro.core.policies import as_policy_arrays
 from repro.scenarios import get_scenario
 from repro.scenarios.sweep import policy_arrays
 
-# tier -> (registered scenario, default policy-batch width).  All sizes
-# come from the registry so the profile and the bit-identity suite
-# exercise the same configurations.  The large tier skips the vmapped
-# batch by default: under vmap the kernel's skip-when-idle conds become
-# run-both-branches selects (DESIGN.md §8), so a batched xl run measures
-# a different (much slower) program than the single-replica path the
-# perf gate tracks.
+# tier -> (registered scenario, default policy-batch width, fleet widths).
+# All sizes come from the registry so the profile and the bit-identity
+# suite exercise the same configurations.  The large tier skips the
+# vmapped batch by default: under vmap the kernel's skip-when-idle conds
+# become run-both-branches selects (DESIGN.md §8), so a batched xl run
+# measures a different (much slower) program than the single-replica path
+# the perf gate tracks.  The FLEET path (chunked early-exit cohorts,
+# DESIGN.md §9) is what cracks that wall; its per-width entries carry
+# ``batch_efficiency`` = fleet sims/s ÷ this tier's serial sims/s, so the
+# old inversion (0.01x at width 6) and the fix (>1x) are both visible in
+# the committed baseline.
 TIERS = (
-    ("small", "paper-fabric", 6),
-    ("medium", "leaf-spine", 6),
-    ("large", "leaf-spine-xl", 0),
+    ("small", "paper-fabric", 6, (1, 6, 64, 128)),
+    ("medium", "leaf-spine", 6, (1, 6, 64, 128)),
+    ("large", "leaf-spine-xl", 0, (2, 4, 8)),
 )
 
 # the profiled policy: SDN routing + least-used placement (both take the
@@ -61,7 +68,8 @@ BATCH_POLICIES = [
 ]
 
 
-def profile_scenario(name: str, iters: int, batch_width: int) -> dict:
+def profile_scenario(name: str, iters: int, batch_width: int,
+                     fleet_widths=()) -> dict:
     t0 = time.perf_counter()
     setup = get_scenario(name).build()
     consts, meta = make_consts(setup)
@@ -125,8 +133,42 @@ def profile_scenario(name: str, iters: int, batch_width: int) -> dict:
             "wall_s": bwall,
             "sims_per_s": batch_width / bwall,
             "steps_per_s": int(np.asarray(sb.steps).sum()) / bwall,
+            "batch_efficiency": (batch_width / bwall) / out["sims_per_s"],
         }
+
+    out["fleet"] = [
+        profile_fleet(name, W, iters, out["sims_per_s"])
+        for W in fleet_widths]
     return out
+
+
+def profile_fleet(name: str, width: int, iters: int,
+                  serial_sims_per_s: float) -> dict:
+    """Fleet sims/s at one cohort width: the SAME profiled policy as the
+    serial measurement, replicated across seeds, so ``batch_efficiency``
+    compares like with like (width-way parallelism of one workload)."""
+    from repro.api import Experiment
+
+    # slow tiers (xl) drain one wave; fast tiers use >= 2 waves so the
+    # retire/refill machinery is inside the measured window
+    n = width if serial_sims_per_s < 5 else max(width, min(64, 4 * width))
+    exp = Experiment(scenarios=name,
+                     policies=[dict(seed=i, **PROFILE_POLICY)
+                               for i in range(n)])
+    exp.run_fleet(width=width)                              # compile
+    walls = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        exp.run_fleet(width=width)
+        walls.append(time.perf_counter() - t0)
+    wall = min(walls)
+    return {
+        "width": width,
+        "sims": n,
+        "wall_s": wall,
+        "sims_per_s": n / wall,
+        "batch_efficiency": (n / wall) / serial_sims_per_s,
+    }
 
 
 def check_regression(report: dict, baseline_path: str,
@@ -157,14 +199,18 @@ def check_regression(report: dict, baseline_path: str,
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenarios", nargs="+",
-                    default=[t for t, _, _ in TIERS],
-                    choices=[t for t, _, _ in TIERS],
+                    default=[t for t, _, _, _ in TIERS],
+                    choices=[t for t, _, _, _ in TIERS],
                     help="size tiers to profile")
     ap.add_argument("--iters", type=int, default=3,
                     help="timed runs per measurement")
     ap.add_argument("--batch-width", type=int, default=None,
                     help="policy-batch width for sims/s "
                          "(0 = skip; default: per-tier)")
+    ap.add_argument("--widths", default=None,
+                    help="comma-separated fleet cohort widths, e.g. "
+                         "1,6,32 (default: per-tier; empty string skips "
+                         "the fleet section)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write the machine-readable report")
     ap.add_argument("--baseline", metavar="PATH", default=None,
@@ -173,7 +219,7 @@ def main(argv=None) -> int:
                     help="allowed fractional steps/s drop vs --baseline")
     args = ap.parse_args(argv)
 
-    by_tier = {t: (name, bw) for t, name, bw in TIERS}
+    by_tier = {t: (name, bw, fw) for t, name, bw, fw in TIERS}
     report = {"benchmark": "engine_profile",
               "backend": jax.default_backend(),
               "iters": args.iters,
@@ -183,15 +229,22 @@ def main(argv=None) -> int:
     print(hdr)
     print("-" * len(hdr))
     for tier in args.scenarios:
-        name, tier_bw = by_tier[tier]
+        name, tier_bw, tier_fw = by_tier[tier]
         bw = tier_bw if args.batch_width is None else args.batch_width
-        r = profile_scenario(name, args.iters, bw)
+        fw = (tier_fw if args.widths is None else
+              tuple(int(w) for w in args.widths.split(",") if w))
+        r = profile_scenario(name, args.iters, bw, fw)
         report["tiers"][tier] = r
         sims = r.get("batch", {}).get("sims_per_s", r["sims_per_s"])
         print(f"{tier:6} {name:14} {r['n_tasks']:6d} "
               f"{r['n_packets']:6d} {r['steps']:6d} {r['wall_s']:8.3f} "
               f"{r['steps_per_s']:9.0f} {sims:7.2f}"
               + ("  STALLED" if r["stalled"] else ""))
+        for fr in r["fleet"]:
+            print(f"  fleet width={fr['width']:<4d} "
+                  f"{fr['sims']:3d} sims in {fr['wall_s']:7.3f}s  "
+                  f"{fr['sims_per_s']:8.1f} sims/s  "
+                  f"batch_efficiency={fr['batch_efficiency']:.2f}x")
 
     if args.json:
         os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)

@@ -22,7 +22,8 @@ from ..core.policies import (PolicyConfig, PolicyField, as_policy_arrays,
                              policy_defaults, policy_field_names,
                              policy_fields, register_policy_field)
 from ..core.simmeta import SimMeta
-from .experiment import Experiment
+from .experiment import (Experiment, consts_build_count, consts_cache_clear)
+from .fleet import CohortSchedule, FleetStats, StepPredictor, run_fleet
 from .results import Results
 from . import runners
 from .runners import get_runner
@@ -32,4 +33,6 @@ __all__ = [
     "PolicyConfig", "PolicyField", "as_policy_arrays", "policy_defaults",
     "policy_field_names", "policy_fields", "register_policy_field",
     "runners", "get_runner",
+    "run_fleet", "FleetStats", "StepPredictor", "CohortSchedule",
+    "consts_build_count", "consts_cache_clear",
 ]

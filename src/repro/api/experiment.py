@@ -18,6 +18,7 @@ returning a ``Results`` grid with pad-job masking built in.
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Any, List, Mapping, Optional, Sequence, Tuple, Union
 
 import jax
@@ -34,13 +35,55 @@ from . import runners
 ScenarioLike = Union[str, SimSetup, Any]         # Any: scenarios.Scenario
 PolicyLike = Union[None, Mapping, Any]           # Any: PolicyConfig
 
+# Keyed consts cache (DESIGN.md §9): registry scenarios build
+# deterministically from their name, so the host-side lowering
+# (route-table DFS + packing — ~2.9 s for leaf-spine-xl) is paid once per
+# process, not once per Experiment.  Only registry-name scenarios are
+# cacheable; Scenario objects / raw SimSetups may differ run to run under
+# the same name, and failure crosses mutate the setups after build.
+_SETUP_CACHE: "OrderedDict[str, Tuple[str, SimSetup]]" = OrderedDict()
+_CONSTS_CACHE: "OrderedDict[Tuple[str, ...], Any]" = OrderedDict()
+_CACHE_MAX = 16
+_CONSTS_BUILDS = 0
+
+
+def consts_build_count() -> int:
+    """Number of EngineConsts builds (make_consts/pack_setups) since import
+    or the last ``consts_cache_clear`` — the regression hook for "one build
+    per scenario set per fleet" (tests/test_fleet.py)."""
+    return _CONSTS_BUILDS
+
+
+def consts_cache_clear() -> None:
+    """Drop cached setups/consts and zero ``consts_build_count``."""
+    global _CONSTS_BUILDS
+    _SETUP_CACHE.clear()
+    _CONSTS_CACHE.clear()
+    _CONSTS_BUILDS = 0
+
+
+def _lru_put(cache: OrderedDict, key, value) -> None:
+    cache[key] = value
+    while len(cache) > _CACHE_MAX:
+        cache.popitem(last=False)
+
 
 def _build_scenario(item: ScenarioLike) -> Tuple[str, SimSetup]:
-    """-> (name, SimSetup) from a registry name, Scenario, or SimSetup."""
+    """-> (name, SimSetup) from a registry name, Scenario, or SimSetup.
+
+    Registry names are memoized in ``_SETUP_CACHE`` — the build is a pure
+    function of the name (factories are deterministic, seeds are explicit
+    defaults), so a second Experiment over the same name skips the
+    host-side lowering entirely."""
     if isinstance(item, str):
+        if item in _SETUP_CACHE:
+            _SETUP_CACHE.move_to_end(item)
+            return _SETUP_CACHE[item]
         from ..scenarios import get_scenario    # local: scenarios uses core
         sc = get_scenario(item)
-        return sc.name, sc.build()
+        built = (sc.name, sc.build())
+        _lru_put(_SETUP_CACHE, item, built)
+        return built
     if isinstance(item, SimSetup):
         return "scenario", item
     if hasattr(item, "build"):                   # scenarios.Scenario
@@ -131,6 +174,17 @@ class Experiment:
     def __init__(self, scenarios: Any, policies: Any = None,
                  seeds: Optional[Sequence[int]] = None,
                  failures: Any = None):
+        # consts are cacheable across Experiments only when every scenario
+        # is a bare registry name (deterministic rebuild) and no failure
+        # cross mutates the setups afterwards
+        items = (list(scenarios)
+                 if isinstance(scenarios, (list, tuple))
+                 and not _is_pair(scenarios, in_sequence=False)
+                 else [scenarios])
+        self._consts_key = (tuple(items)
+                            if failures is None
+                            and all(isinstance(i, str) for i in items)
+                            else None)
         self.scenarios: List[Tuple[str, SimSetup]] = _normalize(
             scenarios, _build_scenario, "scenario")
         if failures is not None:
@@ -162,14 +216,25 @@ class Experiment:
 
     def build(self):
         """-> (consts, SimMeta): unpacked for one scenario, packed (leading
-        scenario dim) for several.  Memoized — the Experiment is immutable
-        after construction."""
+        scenario dim) for several.  Memoized per instance, and — for
+        registry-name scenario sets without failure crosses — in the
+        process-wide keyed consts cache, so a fleet of Experiments over the
+        same grid pays for one build total (``consts_build_count``)."""
         if self._built is None:
+            key = self._consts_key
+            if key is not None and key in _CONSTS_CACHE:
+                _CONSTS_CACHE.move_to_end(key)
+                self._built = _CONSTS_CACHE[key]
+                return self._built
+            global _CONSTS_BUILDS
+            _CONSTS_BUILDS += 1
             if len(self.scenarios) == 1:
                 self._built = make_consts(self.scenarios[0][1])
             else:
                 from ..scenarios.sweep import pack_setups
                 self._built = pack_setups([s for _, s in self.scenarios])
+            if key is not None:
+                _lru_put(_CONSTS_CACHE, key, self._built)
         return self._built
 
     def policy_arrays(self):
@@ -204,6 +269,16 @@ class Experiment:
         return Results(states=states, consts=consts, meta=meta,
                        scenario_names=self.scenario_names,
                        policy_names=self.policy_names)
+
+    def run_fleet(self, width: int = 32, chunk_steps: int = 32,
+                  **kw) -> Results:
+        """Execute the grid through the fleet engine (DESIGN.md §9):
+        chunked early-exit cohorts grouped by static policy signature,
+        sharded across devices when more than one is visible.  Bit-identical
+        to ``run()``; strictly faster once the grid is wider than a few
+        sims.  Extra keywords pass through to ``fleet.run_fleet``."""
+        from .fleet import run_fleet
+        return run_fleet(self, width=width, chunk_steps=chunk_steps, **kw)
 
 
 def _cross_failures(scenarios: List[Tuple[str, SimSetup]],

@@ -48,7 +48,7 @@ KINDS = ("single", "policy_batch", "zipped", "grid")
 # candidate schedule — without eviction a long-running process would leak
 # one executable per shape ever seen.
 CACHE_MAX = 64
-_CACHE: OrderedDict[Tuple[SimMeta, str], Callable] = OrderedDict()
+_CACHE: "OrderedDict[Tuple, Callable]" = OrderedDict()
 _TRACE_COUNT = 0
 
 
@@ -62,10 +62,31 @@ def cache_size() -> int:
 
 
 def cache_clear() -> None:
-    """Drop all cached runners and reset the trace counter (tests)."""
+    """Drop all cached programs and reset the trace counter (tests)."""
     global _TRACE_COUNT
     _CACHE.clear()
     _TRACE_COUNT = 0
+
+
+def get_cached_program(key: Tuple, builder: Callable[[], Callable]) -> Callable:
+    """The shared program cache: ``builder()`` runs at most once per ``key``
+    (hashable tuple), its result LRU-retained up to ``CACHE_MAX`` entries.
+    ``get_runner`` and the fleet layer (``api.fleet``, DESIGN.md §9) both
+    park their jitted chunk/runner programs here, so one ``cache_clear``
+    resets everything tests care about."""
+    if key not in _CACHE:
+        _CACHE[key] = builder()
+        while len(_CACHE) > CACHE_MAX:
+            _CACHE.popitem(last=False)
+    _CACHE.move_to_end(key)
+    return _CACHE[key]
+
+
+def note_trace() -> None:
+    """Bump the trace counter — called at TRACE time from inside a traced
+    function, so jit-cache hits don't count (see ``_build.counted``)."""
+    global _TRACE_COUNT
+    _TRACE_COUNT += 1
 
 
 def get_runner(meta: SimMeta, kind: str) -> Callable:
@@ -78,13 +99,7 @@ def get_runner(meta: SimMeta, kind: str) -> Callable:
     meta = SimMeta.coerce(meta)
     if kind not in KINDS:
         raise ValueError(f"unknown runner kind {kind!r}; one of {KINDS}")
-    key = (meta, kind)
-    if key not in _CACHE:
-        _CACHE[key] = _build(meta, kind)
-        while len(_CACHE) > CACHE_MAX:
-            _CACHE.popitem(last=False)
-    _CACHE.move_to_end(key)
-    return _CACHE[key]
+    return get_cached_program((meta, kind), lambda: _build(meta, kind))
 
 
 def _build(meta: SimMeta, kind: str) -> Callable:
@@ -93,8 +108,7 @@ def _build(meta: SimMeta, kind: str) -> Callable:
     def counted(consts, pol, s0):
         # executes at TRACE time only — the compiled program has no trace
         # of it, so the counter counts traces, not runs.
-        global _TRACE_COUNT
-        _TRACE_COUNT += 1
+        note_trace()
         return base(consts, pol, s0)
 
     def init_one(consts, pol):

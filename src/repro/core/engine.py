@@ -53,6 +53,24 @@ from .simmeta import SimMeta
 _INF = jnp.float32(jnp.inf)
 
 
+def static_policy_value(x):
+    """Python int value of a policy field when it is host-static (a plain
+    int / numpy scalar), else ``None``.
+
+    Fleet cohorts group lanes by branch-selecting policy fields (routing,
+    traffic, placement) and pass them as Python ints, so the engine can
+    specialize the dispatch at trace time — under ``vmap`` a ``lax.cond``
+    with a batched predicate lowers to a select that EXECUTES both
+    branches, which is exactly the batch-wall pathology the fleet path
+    exists to avoid (DESIGN.md §9).  Traced fields keep the vmap-safe
+    dynamic dispatch unchanged."""
+    if isinstance(x, (bool, int, np.integer)):
+        return int(x)
+    if isinstance(x, np.ndarray) and x.ndim == 0:
+        return int(x)
+    return None
+
+
 def job_valid_mask(job_n_out):
     """A job slot is live iff it expects output packets — the ONE definition
     of job validity, shared by make_consts and the packed-sweep builder."""
@@ -353,7 +371,7 @@ def _apply_failures(c: EngineConsts, meta, pol, s: SimState, cache):
     restart = pol["recovery"] == RECOVERY_RESTART
 
     def transitions(args):
-        s, _ = args
+        s, nc0 = args
         # packets first: endpoints must resolve against the ACTIVATION-time
         # placement, i.e. before any task unplaces below.
         n_hosts_pad = c.host_fail_t.shape[0]
@@ -386,7 +404,12 @@ def _apply_failures(c: EngineConsts, meta, pol, s: SimState, cache):
         task_rem = jnp.where(hit_t & restart, c.task_mi.astype(jnp.float32),
                              s.task_rem)
         task_start = jnp.where(hit_t, jnp.nan, s.task_start)
-        vm_load = s.vm_load.at[vm_safe].add(-hit_t.astype(jnp.int32))
+        # one-hot contraction, not a scatter: this runs EVERY step under a
+        # vmapped cond, and batched scatters serialize per lane
+        vm_iota = jnp.arange(s.vm_load.shape[0], dtype=jnp.int32)
+        vm_load = s.vm_load - jnp.sum(
+            (vm_safe[:, None] == vm_iota[None, :]) & hit_t[:, None],
+            axis=0).astype(jnp.int32)
         task_vm = jnp.where(hit_t, -1, s.task_vm)
         task_restarts = s.task_restarts + hit_t.astype(jnp.int32)
 
@@ -395,9 +418,28 @@ def _apply_failures(c: EngineConsts, meta, pol, s: SimState, cache):
             pkt_cand=pkt_cand, pkt_reroutes=pkt_reroutes,
             task_state=task_state, task_rem=task_rem, task_start=task_start,
             task_vm=task_vm, vm_load=vm_load, task_restarts=task_restarts)
-        # reverted packets left the active set -> re-derive the carried
-        # channel counts from scratch (transition steps are rare)
-        return s, _recount_channels(c, meta, s)
+        # reverted packets left the active set: subtract exactly their
+        # channel contributions via a compacted per-packet scan (loop
+        # length = the revert count, zero on recovery-only steps).  The
+        # carried nc is maintained exactly by activation/completion, so
+        # this equals a from-scratch recount bit-for-bit — but a recount's
+        # [n_p, H, n_links] one-hot runs EVERY step under a vmapped cond
+        # (DESIGN.md §9) and dominated the failure-grid fleet profile.
+        n_p = hit_p.shape[0]
+        pidx = jnp.arange(n_p, dtype=jnp.int32)
+        liota = jnp.arange(meta.n_links, dtype=jnp.int32)
+
+        def drop_one(k, carry):
+            nc, cursor = carry
+            i = jnp.min(jnp.where(hit_p & (pidx > cursor), pidx, n_p))
+            links_k = links[jnp.minimum(i, n_p - 1)]
+            nc = nc - jnp.sum((links_k[:, None] == liota[None, :])
+                              .astype(jnp.int32), axis=0)
+            return nc, i
+
+        nc, _ = jax.lax.fori_loop(0, jnp.sum(hit_p.astype(jnp.int32)),
+                                  drop_one, (nc0, jnp.int32(-1)))
+        return s, nc
 
     s, nc = jax.lax.cond(jnp.any(new_h) | jnp.any(new_l), transitions,
                          lambda args: args, (s, cache["nc"]))
@@ -405,32 +447,38 @@ def _apply_failures(c: EngineConsts, meta, pol, s: SimState, cache):
 
 
 def _place_batch(c: EngineConsts, meta, pol, aux, s: SimState, mine, pos,
-                 vm_live, n_live, kth) -> SimState:
+                 vm_live, n_live) -> SimState:
     """Place every task in ``mine`` preserving the sequential placement
     order.  ``pos`` is each mine-task's 0-based position in that order
     (garbage outside ``mine`` — masked here), computed by the caller with
     prefix-sum arithmetic so no per-step sort is needed (DESIGN.md §8).
 
     Round-robin and random placement need no load feedback, so their picks
-    are pure rank-plus-counter / hash arithmetic against the ``kth``
-    live-VM remap.  Least-used must see each earlier placement's load
-    bump, so it runs a compacted scan over the tasks-to-place only (loop
-    length = the live placement count, not the padded task axis)."""
-    n_t = mine.shape[0]
+    are pure rank-plus-counter / hash arithmetic against the k-th-live VM
+    remap.  Least-used must see each earlier placement's load bump, so it
+    runs a compacted scan over the tasks-to-place only (loop length = the
+    live placement count, not the padded task axis).
+
+    Nothing axis-wide happens outside the branch actually taken: the
+    vectorized picks (and the live-VM remap they index) build inside
+    ``place_vec``, and the least-used scan finds its k-th task by a
+    per-trip masked argmax instead of a precomputed inverse-permutation
+    scatter — under a vmapped cond this body runs EVERY step, and a
+    batched scatter serializes one row per lane (DESIGN.md §9)."""
     counter0 = s.place_counter
     n_mine = jnp.sum(mine.astype(jnp.int32))
-    # order[k] = task id placed k-th (scatter-compaction inverse of pos)
-    order = jnp.zeros(n_t, jnp.int32).at[
-        jnp.where(mine, pos, n_t)].set(jnp.arange(n_t, dtype=jnp.int32),
-                                       mode="drop")
     mod = jnp.maximum(n_live, 1)
-    h = aux["task_hash"]
-    rr_pick = kth[(counter0 + pos) % mod]
-    rnd_pick = kth[h % mod]
-    vec_pick = jnp.where(pol["placement"] == PLACE_ROUND_ROBIN,
-                         rr_pick, rnd_pick)
 
     def place_vec(_):
+        # kth[k] = slot index of the k-th live VM (stable sort: live slots
+        # first in ascending index order, so a ``% mod`` pick never lands
+        # on a dead/pad slot) — same values the old prefix-sum scatter
+        # produced
+        kth = jnp.argsort(~vm_live)
+        rr_pick = kth[(counter0 + pos) % mod]
+        rnd_pick = kth[aux["task_hash"] % mod]
+        vec_pick = jnp.where(pol["placement"] == PLACE_ROUND_ROBIN,
+                             rr_pick, rnd_pick)
         task_vm = jnp.where(mine, vec_pick, s.task_vm)
         vm_load = s.vm_load.at[
             jnp.where(mine, vec_pick, meta.n_vms)].add(1, mode="drop")
@@ -441,7 +489,7 @@ def _place_batch(c: EngineConsts, meta, pol, aux, s: SimState, mine, pos,
 
         def place_one(k, carry):
             vm_load, task_vm = carry
-            t = order[k]
+            t = jnp.argmax(mine & (pos == k)).astype(jnp.int32)
             pick = jnp.argmin(jnp.where(vm_live, vm_load, imax)
                               ).astype(jnp.int32)
             return vm_load.at[pick].add(1), task_vm.at[t].set(pick)
@@ -450,10 +498,19 @@ def _place_batch(c: EngineConsts, meta, pol, aux, s: SimState, mine, pos,
                                  (s.vm_load, s.task_vm))
 
     # any placement id that is neither round-robin nor random falls to the
-    # load-feedback scan — same fallback the scalar kernel had
-    use_scan = ((pol["placement"] != PLACE_ROUND_ROBIN)
-                & (pol["placement"] != PLACE_RANDOM))
-    vm_load, task_vm = jax.lax.cond(use_scan, place_scan, place_vec, None)
+    # load-feedback scan — same fallback the scalar kernel had.  A
+    # host-static placement id (fleet cohorts — DESIGN.md §9) picks the
+    # branch at trace time so vmap never builds the unused one.
+    placement_static = static_policy_value(pol["placement"])
+    if placement_static is not None:
+        branch = (place_scan if placement_static not in
+                  (PLACE_ROUND_ROBIN, PLACE_RANDOM) else place_vec)
+        vm_load, task_vm = branch(None)
+    else:
+        use_scan = ((pol["placement"] != PLACE_ROUND_ROBIN)
+                    & (pol["placement"] != PLACE_RANDOM))
+        vm_load, task_vm = jax.lax.cond(use_scan, place_scan, place_vec,
+                                        None)
     return s._replace(vm_load=vm_load, task_vm=task_vm,
                       place_counter=counter0 + n_mine)
 
@@ -486,13 +543,6 @@ def _admit_and_place(c: EngineConsts, meta, pol, aux, s: SimState) -> SimState:
         vm_live = vm_live & ~s.host_dead[
             jnp.clip(c.vm_host, 0, c.host_fail_t.shape[0] - 1)]
     n_live = jnp.sum(vm_live.astype(jnp.int32))
-    # k-th-live remap: kth[k] = slot index of the k-th live VM (prefix-sum
-    # compaction; the identity for k < n_vms when nothing is dead, since
-    # pad slots sit at the tail)
-    live_pos = jnp.cumsum(vm_live.astype(jnp.int32)) - 1
-    kth = jnp.zeros(meta.n_vms, jnp.int32).at[
-        jnp.where(vm_live, live_pos, meta.n_vms)].set(
-        jnp.arange(meta.n_vms, dtype=jnp.int32), mode="drop")
 
     n_j = s.job_admitted.shape[0]
     released = (~s.job_admitted) & c.job_valid & (c.job_release <= s.time)
@@ -509,8 +559,10 @@ def _admit_and_place(c: EngineConsts, meta, pol, aux, s: SimState) -> SimState:
         jnp.where(pol["job_selection"] == JOBSEL_PRIORITY,
                   -c.job_priority, c.job_release))
     key = jnp.where(released, key, _INF)
-    rank = jnp.zeros(n_j, jnp.int32).at[jnp.argsort(key)].set(
-        jnp.arange(n_j, dtype=jnp.int32))
+    # rank = inverse of the stable sort permutation (argsort of argsort);
+    # no job-axis scatter — this runs every step under vmap (DESIGN.md §9)
+    ord_j = jnp.argsort(key)
+    rank = jnp.argsort(ord_j).astype(jnp.int32)
     admit_now = released & (rank < slots)
 
     job_of_task = jnp.maximum(c.task_job, 0)
@@ -523,12 +575,13 @@ def _admit_and_place(c: EngineConsts, meta, pol, aux, s: SimState) -> SimState:
         # counts of better-ranked admitted jobs, then add the task's
         # static rank within its job.
         mine = c.task_valid & admit_now[job_of_task]
-        cnt_by_rank = jnp.zeros(n_j, jnp.int32).at[rank].set(
-            jnp.where(admit_now, c.job_n_tasks, 0))
+        # rank-major task counts by GATHERING through the sort permutation
+        # (cnt_by_rank[r] = task count of the rank-r job) — not a scatter
+        cnt_by_rank = jnp.where(admit_now[ord_j], c.job_n_tasks[ord_j], 0)
         off_by_rank = jnp.cumsum(cnt_by_rank) - cnt_by_rank  # exclusive
         pos = off_by_rank[rank[job_of_task]] + c.task_rank_in_job
         return _place_batch(c, meta, pol, aux, s, mine, pos, vm_live,
-                            n_live, kth)
+                            n_live)
 
     s = jax.lax.cond(any_admit, admit_place, lambda s: s, s)
     s = s._replace(job_admitted=s.job_admitted | admit_now,
@@ -547,7 +600,7 @@ def _admit_and_place(c: EngineConsts, meta, pol, aux, s: SimState) -> SimState:
             lambda s: _place_batch(
                 c, meta, pol, aux, s, orphaned,
                 jnp.cumsum(orphaned.astype(jnp.int32)) - 1, vm_live,
-                n_live, kth),
+                n_live),
             lambda s: s, s)
         placed = placed | jnp.any(orphaned)
     return s, placed
@@ -599,13 +652,6 @@ def _endpoint_cache(c: EngineConsts, meta, s: SimState):
     return {"pair": pair, "reachable": reachable}
 
 
-def _recount_channels(c: EngineConsts, meta, s: SimState) -> jnp.ndarray:
-    """nc from scratch — the ground truth the incremental carry tracks."""
-    p_active = s.pkt_state == ACTIVE
-    return fairshare.channel_counts(_route_links(c, s, p_active), p_active,
-                                    meta.n_links)
-
-
 def _activate(c: EngineConsts, meta, pol, aux, cache, s: SimState):
     """Task activation then packet activation, both batched (DESIGN.md §8).
 
@@ -618,6 +664,13 @@ def _activate(c: EngineConsts, meta, pol, aux, cache, s: SimState):
     update beats a packet-axis scatter on CPU for typical burst sizes).
     Steps where nothing becomes ready skip the routing work altogether
     (``lax.cond`` on the ready count).
+
+    When the routing policy arrives host-static (``static_policy_value``,
+    fleet cohorts — DESIGN.md §9) the dispatch specializes at trace time:
+    legacy routing drops the scan entirely (no channel feedback, so one
+    vectorized gather + scatter-add reproduces the sequential result
+    bit-for-bit), and SDN routing precomputes the pop order with one sort
+    so the scan body loses its per-iteration argmax + mask scatter.
 
     Returns ``(s, links, p_active, nc, link_bw)`` — the post-activation
     route-link tensor, active mask, per-link channel counts and effective
@@ -655,45 +708,9 @@ def _activate(c: EngineConsts, meta, pol, aux, cache, s: SimState):
 
     link_bw = _effective_link_bw(c, meta, s)
 
-    def activate_ready(args):
-        s, nc = args
-        # legacy flow = task-to-task connection (§4: "task-to-task
-        # communication"); each flow picks its equal-hop route
-        # independently at random and keeps it (§5.2).  No channel
-        # feedback -> one shot (the flow hash is loop-invariant,
-        # precomputed in ``aux``).
-        legacy_cand = legacy_route_choice(c.n_cand[pair_all],
-                                          aux["pkt_hash"])
-        n_ready = jnp.sum(p_ready.astype(jnp.int32))
-        is_sdn = pol["routing"] == ROUTE_SDN
-
-        # one scan over the ready set only, in packet-index order (the
-        # argmax-chain pops the first set bit each iteration — no sort,
-        # no packet-axis scatter).  The carried ``nc`` doubles as the
-        # controller's live view: each SDN pick sees the channels
-        # admitted just before it, and the final value IS the
-        # post-activation channel count (DESIGN.md §8).  SDN's global
-        # view includes link liveness (link_bw has dead links at 0, so
-        # their candidates lose the bottleneck argmax); the legacy
-        # static hash is failure-blind and can re-pin the dead route.
-        def act_one(_, carry):
-            ch, cand_all, mask = carry
-            i = jnp.argmax(mask).astype(jnp.int32)
-            mask = mask.at[i].set(False)
-            pair = pair_all[i]
-            cand = jnp.where(
-                is_sdn,
-                sdn_route_choice(c.routes[pair], c.n_cand[pair], link_bw,
-                                 ch),
-                legacy_cand[i])
-            links = c.routes[pair, cand]
-            ch = ch.at[jnp.maximum(links, 0)].add(
-                (links >= 0).astype(jnp.int32))
-            return ch, cand_all.at[i].set(cand), mask
-
-        nc, cand, _ = jax.lax.fori_loop(0, n_ready, act_one,
-                                        (nc, legacy_cand, p_ready))
-
+    def _apply_ready(s, cand, nc):
+        # commit the activation: only ready packets change, so a step with
+        # an empty ready set leaves (s, nc) bit-identical
         if meta.has_failures:
             # a failure-reverted packet re-activates but keeps its FIRST
             # start: its measured duration includes the outage
@@ -707,8 +724,125 @@ def _activate(c: EngineConsts, meta, pol, aux, cache, s: SimState):
             pkt_cand=jnp.where(p_ready, cand, s.pkt_cand),
             pkt_start=jnp.where(p_ready, start_val, s.pkt_start)), nc
 
-    s, nc = jax.lax.cond(jnp.any(p_ready), activate_ready,
-                         lambda args: args, (s, cache["nc"]))
+    routing_static = static_policy_value(pol["routing"])
+    if routing_static is not None and routing_static != ROUTE_SDN:
+        # static legacy: no channel feedback -> no scan.  Every ready
+        # packet's hash pick and its route links are gathered at once and
+        # the channel counts bumped by one order-independent integer
+        # scatter-add — commutative, so bit-identical to the sequential
+        # pop order the dynamic path preserves.
+        cand = legacy_route_choice(c.n_cand[pair_all], aux["pkt_hash"])
+        # channel bump over the ready set only — compacted pop-order scan
+        # like the SDN branch minus the route choice (a whole-packet-axis
+        # one-hot contraction moves ~100x more elements than the few ready
+        # packets justify, and a packet-axis scatter serializes per row
+        # under vmap).  The pop order is a cursor-chained masked min per
+        # trip, NOT a precomputed sort: a packet-axis sort runs EVERY step
+        # (most of which have an empty ready set) and was one of the
+        # largest single per-step costs, while the per-trip min only runs
+        # ``n_ready`` times.  Ascending index order is exactly what the
+        # sort yielded — bit-identical.
+        n_p = p_ready.shape[0]
+        n_l = cache["nc"].shape[0]
+        idx = jnp.arange(n_p, dtype=jnp.int32)
+        n_ready = jnp.sum(p_ready.astype(jnp.int32))
+        link_iota = jnp.arange(n_l, dtype=jnp.int32)
+        links_all = c.routes[pair_all, cand]  # [P, H]
+        links_safe = jnp.where(links_all >= 0, links_all, -1)
+
+        def bump_one(k, carry):
+            ch, cursor = carry
+            i = jnp.min(jnp.where(p_ready & (idx > cursor), idx, n_p))
+            links = links_safe[jnp.minimum(i, n_p - 1)]     # [H]
+            ch = ch + jnp.sum((links[:, None] == link_iota[None, :])
+                              .astype(jnp.int32), axis=0)
+            return ch, i
+
+        nc, _ = jax.lax.fori_loop(0, n_ready, bump_one,
+                                  (cache["nc"], jnp.int32(-1)))
+        s, nc = _apply_ready(s, cand, nc)
+    elif routing_static == ROUTE_SDN:
+        # static SDN: the controller feedback loop stays sequential, but
+        # the scan body is restructured to be scatter-free — under vmap an
+        # XLA/CPU scatter serializes one row per lane, so the two scatters
+        # of the dynamic body dominate the whole step at fleet widths.
+        # The pop order (ascending packet index — exactly what the
+        # argmax-chain yields) comes from a cursor-chained masked min per
+        # trip, NOT a precomputed packet-axis sort (which would run EVERY
+        # step, ready set or not, and was one of the largest single
+        # per-step costs); picks land in a POP-ORDER sequence at the
+        # (unbatched) loop index — a dynamic_update_slice, not a scatter —
+        # and are mapped back to the packet axis afterwards by a rank
+        # gather; the channel bump is a dense one-hot compare-sum,
+        # bit-identical to the scatter-add (integer adds of the same six
+        # links).
+        n_p = p_ready.shape[0]
+        n_l = cache["nc"].shape[0]
+        idx = jnp.arange(n_p, dtype=jnp.int32)
+        rank = jnp.cumsum(p_ready.astype(jnp.int32)) - 1
+        n_ready = jnp.sum(p_ready.astype(jnp.int32))
+        link_iota = jnp.arange(n_l, dtype=jnp.int32)
+
+        def act_sdn(k, carry):
+            ch, cand_seq, cursor = carry
+            i = jnp.min(jnp.where(p_ready & (idx > cursor), idx, n_p))
+            pair = pair_all[jnp.minimum(i, n_p - 1)]
+            cand = sdn_route_choice(c.routes[pair], c.n_cand[pair],
+                                    link_bw, ch)
+            links = c.routes[pair, cand]  # [H]
+            bump = jnp.sum((links[:, None] == link_iota[None, :])
+                           .astype(jnp.int32), axis=0)
+            return ch + bump, \
+                jax.lax.dynamic_update_index_in_dim(cand_seq, cand, k, 0), i
+
+        nc, cand_seq, _ = jax.lax.fori_loop(
+            0, n_ready, act_sdn,
+            (cache["nc"], jnp.zeros(n_p, jnp.int32), jnp.int32(-1)))
+        cand = cand_seq[jnp.maximum(rank, 0)]
+        s, nc = _apply_ready(s, cand, nc)
+    else:
+        def activate_ready(args):
+            s, nc = args
+            # legacy flow = task-to-task connection (§4: "task-to-task
+            # communication"); each flow picks its equal-hop route
+            # independently at random and keeps it (§5.2).  No channel
+            # feedback -> one shot (the flow hash is loop-invariant,
+            # precomputed in ``aux``).
+            legacy_cand = legacy_route_choice(c.n_cand[pair_all],
+                                              aux["pkt_hash"])
+            n_ready = jnp.sum(p_ready.astype(jnp.int32))
+            is_sdn = pol["routing"] == ROUTE_SDN
+
+            # one scan over the ready set only, in packet-index order (the
+            # argmax-chain pops the first set bit each iteration — no sort,
+            # no packet-axis scatter).  The carried ``nc`` doubles as the
+            # controller's live view: each SDN pick sees the channels
+            # admitted just before it, and the final value IS the
+            # post-activation channel count (DESIGN.md §8).  SDN's global
+            # view includes link liveness (link_bw has dead links at 0, so
+            # their candidates lose the bottleneck argmax); the legacy
+            # static hash is failure-blind and can re-pin the dead route.
+            def act_one(_, carry):
+                ch, cand_all, mask = carry
+                i = jnp.argmax(mask).astype(jnp.int32)
+                mask = mask.at[i].set(False)
+                pair = pair_all[i]
+                cand = jnp.where(
+                    is_sdn,
+                    sdn_route_choice(c.routes[pair], c.n_cand[pair],
+                                     link_bw, ch),
+                    legacy_cand[i])
+                links = c.routes[pair, cand]
+                ch = ch.at[jnp.maximum(links, 0)].add(
+                    (links >= 0).astype(jnp.int32))
+                return ch, cand_all.at[i].set(cand), mask
+
+            nc, cand, _ = jax.lax.fori_loop(0, n_ready, act_one,
+                                            (nc, legacy_cand, p_ready))
+            return _apply_ready(s, cand, nc)
+
+        s, nc = jax.lax.cond(jnp.any(p_ready), activate_ready,
+                             lambda args: args, (s, cache["nc"]))
 
     p_active = s.pkt_state == ACTIVE
     links = _route_links(c, s, p_active)
@@ -724,8 +858,11 @@ def _rates(c: EngineConsts, meta, pol, s: SimState, links, p_active,
                                meta.intra_bw, nc=nc)
     t_active = s.task_state == ACTIVE
     vm = jnp.maximum(s.task_vm, 0)
-    n_on_vm = jnp.zeros_like(c.vm_total_mips, jnp.int32).at[vm].add(
-        t_active.astype(jnp.int32))
+    # task-axis one-hot contraction, not a scatter (batched scatters
+    # serialize per lane under vmap — DESIGN.md §9); int adds commute
+    vm_iota = jnp.arange(c.vm_total_mips.shape[0], dtype=jnp.int32)
+    n_on_vm = jnp.sum((vm[:, None] == vm_iota[None, :]) & t_active[:, None],
+                      axis=0).astype(jnp.int32)
     share = c.vm_total_mips[vm] / jnp.maximum(n_on_vm[vm], 1).astype(jnp.float32)
     task_rate = jnp.where(t_active, jnp.minimum(c.vm_core_mips[vm], share), 0.0)
     if meta.has_failures:
@@ -766,9 +903,9 @@ def _step(c: EngineConsts, meta, pol, aux, carry):
         s, cache = _apply_failures(c, meta, pol, s, cache)
     s, placed = _admit_and_place(c, meta, pol, aux, s)
     # placement changed -> the packet endpoint/pair cache is stale
-    cache = jax.lax.cond(placed,
-                         lambda: {**cache, **_endpoint_cache(c, meta, s)},
-                         lambda: cache)
+    cache = jax.lax.cond(
+        placed, lambda: {**cache, **_endpoint_cache(c, meta, s)},
+        lambda: cache)
     # the fused network pass: route links, active mask, channel counts and
     # effective bandwidth come out of activation ONCE per step and feed
     # rates + energy below (DESIGN.md §8)
@@ -798,8 +935,25 @@ def _step(c: EngineConsts, meta, pol, aux, carry):
     # energy (power is constant over [t, t+dt))
     vm_safe = jnp.maximum(s.task_vm, 0)
     host_of_task = c.vm_host[vm_safe]
-    mips_used = jnp.zeros_like(c.host_total_mips).at[host_of_task].add(
-        jnp.where(t_active, task_rate, 0.0))
+    # MIPS-by-host via a compacted per-active-task accumulation, not a
+    # task-axis scatter-add: the scatter runs EVERY step, and under a
+    # vmapped cohort an XLA/CPU scatter serializes one row per lane
+    # (DESIGN.md §9) — it alone cost the xl fleet ~10% batch efficiency.
+    # Ascending task order is the scatter's own update order and the
+    # skipped zero-adds are f32-exact (x + 0.0 == x away from -0.0/NaN,
+    # and rate partial sums are finite and non-negative), so host_energy
+    # stays bit-identical to the reference scatter.
+    n_t_e = host_of_task.shape[0]
+    hiota = jnp.arange(c.host_total_mips.shape[0], dtype=jnp.int32)
+    order_e = jnp.sort(jnp.where(t_active,
+                                 jnp.arange(n_t_e, dtype=jnp.int32), n_t_e))
+
+    def mips_one(k, m):
+        i = order_e[jnp.minimum(k, n_t_e - 1)]
+        return m + jnp.where(hiota == host_of_task[i], task_rate[i], 0.0)
+
+    mips_used = jax.lax.fori_loop(0, jnp.sum(t_active.astype(jnp.int32)),
+                                  mips_one, jnp.zeros_like(c.host_total_mips))
     util = jnp.clip(mips_used / jnp.maximum(c.host_total_mips, 1e-9), 0.0, 1.0)
     if meta.has_failures:
         util = jnp.where(s.host_dead, 0.0, util)  # dead hosts draw 0 W
@@ -808,24 +962,29 @@ def _step(c: EngineConsts, meta, pol, aux, carry):
     live_link = (nc > 0).astype(jnp.int32)
     if meta.has_failures:
         live_link = jnp.where(s.link_dead, 0, live_link)  # port is down
-    node_ports = jnp.zeros(meta.n_nodes, jnp.int32)
-    node_ports = node_ports.at[c.link_src].add(live_link)
-    node_ports = node_ports.at[c.link_dst].add(live_link)
-    sw_ports = jax.lax.dynamic_slice_in_dim(node_ports, meta.n_hosts,
-                                            meta.n_switches)
+    # link-axis one-hot contraction, not two scatters (vmap serialization,
+    # DESIGN.md §9); only the switch slice of the node axis is needed
+    sw_iota = meta.n_hosts + jnp.arange(meta.n_switches, dtype=jnp.int32)
+    sw_ports = jnp.sum(
+        ((c.link_src[:, None] == sw_iota[None, :]).astype(jnp.int32)
+         + (c.link_dst[:, None] == sw_iota[None, :]).astype(jnp.int32))
+        * live_link[:, None], axis=0)
     switch_energy = s.switch_energy + switch_power(sw_ports, meta.energy) * dt
 
     if meta.has_failures:
         # per-job downtime: admitted, not done, and NOTHING of the job's
         # moves over [t, t+dt) — the failure-induced outage metric
         n_j = s.job_downtime.shape[0]
-        prog_t = ((t_active & (task_rate > 0) & c.task_valid)
-                  .astype(jnp.int32))
-        prog_p = ((p_active & (pkt_rate > 0) & c.pkt_valid)
-                  .astype(jnp.int32))
-        job_prog = jnp.zeros(n_j, jnp.int32)
-        job_prog = job_prog.at[jnp.maximum(c.task_job, 0)].max(prog_t)
-        job_prog = job_prog.at[jnp.maximum(c.pkt_job, 0)].max(prog_p)
+        prog_t = t_active & (task_rate > 0) & c.task_valid
+        prog_p = p_active & (pkt_rate > 0) & c.pkt_valid
+        # grouped ANY via one-hot masks, not two scatter-maxes (vmap
+        # serialization, DESIGN.md §9); max over {0,1} == any
+        jiota = jnp.arange(n_j, dtype=jnp.int32)
+        job_prog = (
+            jnp.any((jnp.maximum(c.task_job, 0)[:, None] == jiota[None, :])
+                    & prog_t[:, None], axis=0)
+            | jnp.any((jnp.maximum(c.pkt_job, 0)[:, None] == jiota[None, :])
+                      & prog_p[:, None], axis=0)).astype(jnp.int32)
         job_live = (s.job_admitted & (s.job_out_done < c.job_n_out)
                     & c.job_valid)
         job_downtime = s.job_downtime + jnp.where(
@@ -846,36 +1005,53 @@ def _step(c: EngineConsts, meta, pol, aux, carry):
     task_finish = jnp.where(t_done_now, time, s.task_finish)
 
     # completions feed gates + release their channels.  Only a handful of
-    # packets finish per event, so this is an argmax-chain scan over the
-    # done set instead of three packet-axis scatters (DESIGN.md §8); the
-    # carried ``nc`` stays exact (integer adds mirror activation's).
+    # packets finish per event, so this is a compacted scan over the done
+    # set — pop order is a cursor-chained masked min per trip (ascending
+    # packet index, same order the old argmax-chain popped; a precomputed
+    # packet-axis sort runs EVERY step, done set or not, and was one of
+    # the largest single per-step costs) instead of three packet-axis
+    # scatters (DESIGN.md §8).  The per-trip updates are one-hot
+    # compare-sums, NOT scatters: under vmap an XLA/CPU scatter serializes
+    # one row per lane, and at fleet widths the three scatters per trip
+    # dominated the whole step.  All updates are commutative integer adds,
+    # so the carried ``nc`` stays exact (mirroring activation's bumps) —
+    # bit-identical.
     n_t_pad = s.task_got.shape[0]
     n_j_pad = s.job_out_done.shape[0]
+    n_p_pad = p_done_now.shape[0]
     n_done = jnp.sum(p_done_now.astype(jnp.int32))
+    idx_p = jnp.arange(n_p_pad, dtype=jnp.int32)
+    liota = jnp.arange(nc.shape[0], dtype=jnp.int32)
+    tiota = jnp.arange(n_t_pad, dtype=jnp.int32)
+    jiota = jnp.arange(n_j_pad, dtype=jnp.int32)
 
-    def complete_one(_, carry):
-        nc_c, task_got, job_out_done, mask = carry
-        i = jnp.argmax(mask).astype(jnp.int32)
-        mask = mask.at[i].set(False)
-        links_i = c.routes[jnp.maximum(s.pkt_pair[i], 0),
-                           jnp.maximum(s.pkt_cand[i], 0)]
-        nc_c = nc_c.at[jnp.maximum(links_i, 0)].add(
-            -(links_i >= 0).astype(jnp.int32))
-        feeds_i = c.pkt_feeds_task[i]
-        task_got = task_got.at[
-            jnp.where(feeds_i >= 0, feeds_i, n_t_pad)].add(1, mode="drop")
-        job_out_done = job_out_done.at[
-            jnp.where(feeds_i < 0, jnp.maximum(c.pkt_job[i], 0), n_j_pad)
-        ].add(1, mode="drop")
-        return nc_c, task_got, job_out_done, mask
+    def complete_one(k, carry):
+        nc_c, task_got, job_out_done, cursor = carry
+        i = jnp.min(jnp.where(p_done_now & (idx_p > cursor), idx_p,
+                              n_p_pad))                 # k < n_done -> real
+        safe = jnp.minimum(i, n_p_pad - 1)
+        links_i = c.routes[jnp.maximum(s.pkt_pair[safe], 0),
+                           jnp.maximum(s.pkt_cand[safe], 0)]
+        nc_c = nc_c - jnp.sum((links_i[:, None] == liota[None, :])
+                              .astype(jnp.int32), axis=0)
+        feeds_i = c.pkt_feeds_task[safe]
+        task_got = task_got + (tiota == feeds_i).astype(jnp.int32)
+        jtgt = jnp.where(feeds_i < 0, jnp.maximum(c.pkt_job[safe], 0), -1)
+        job_out_done = job_out_done + (jiota == jtgt).astype(jnp.int32)
+        return nc_c, task_got, job_out_done, i
 
     nc_next, task_got, job_out_done, _ = jax.lax.fori_loop(
         0, n_done, complete_one,
-        (nc, s.task_got, s.job_out_done, p_done_now))
+        (nc, s.task_got, s.job_out_done, jnp.int32(-1)))
     newly_job_done = (job_out_done >= c.job_n_out) & \
         (s.job_out_done < c.job_n_out) & c.job_valid
     job_done_t = jnp.where(newly_job_done, time, s.job_done_t)
-    vm_load = s.vm_load.at[vm_safe].add(-t_done_now.astype(jnp.int32))
+    # task-axis one-hot contraction, not a scatter (same vmap reason);
+    # integer adds commute -> bit-identical
+    vm_iota = jnp.arange(s.vm_load.shape[0], dtype=jnp.int32)
+    vm_load = s.vm_load - jnp.sum(
+        (vm_safe[:, None] == vm_iota[None, :])
+        & t_done_now[:, None], axis=0).astype(jnp.int32)
 
     return s._replace(
         time=time, steps=s.steps + 1, stalled=stalled,
@@ -949,6 +1125,98 @@ def make_simulator(setup: SimSetup):
     consts, meta = make_consts(setup)
     run = make_packed_simulator(meta)
     return partial(run, consts)
+
+
+# --- fleet chunk stepper (DESIGN.md §9) ------------------------------------
+
+
+def tree_select(done, old, new):
+    """Per-lane freeze: where ``done`` (a ``[W]`` bool), keep ``old``'s
+    leaves, else take ``new``'s.  The fleet chunk applies it manually after
+    an UNGUARDED vmapped step — a ``lax.cond`` on a batched done flag
+    lowers to a select that still executes the step for every lane, and
+    its both-branch machinery is ~40x slower than the step + select
+    (DESIGN.md §9).  Running ``_step`` on a finished state is safe: its
+    outputs are discarded here, and the compacted scans inside get zero
+    trip counts."""
+    def sel(a, b):
+        d = done.reshape(done.shape + (1,) * (b.ndim - done.ndim))
+        return jnp.where(d, a, b)
+    return jax.tree_util.tree_map(sel, old, new)
+
+
+def init_fleet_carry(consts: EngineConsts, meta, width: int):
+    """The t=0 chunk carry for a ``width``-lane cohort sharing one consts:
+    ``(SimState, step-cache, done)`` with every leaf gaining a leading lane
+    axis.  Lanes start identical — policies differ, states don't."""
+    meta = SimMeta.coerce(meta)
+    s0 = init_state_from_consts(consts, meta.n_switches)
+    cache0 = {**_endpoint_cache(consts, meta, s0),
+              "nc": jnp.zeros(meta.n_links, jnp.int32)}
+    done0 = _finished(consts, meta, s0)
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (width,) + a.shape),
+        (s0, cache0, done0))
+
+
+def make_fleet_chunk(meta, static_pol=None, chunk_steps: int = 32):
+    """Build the fleet's K-step cohort stepper (DESIGN.md §9):
+    ``chunk(consts, pol, carry) -> carry`` advancing every live lane up to
+    ``chunk_steps`` events, early-exiting when the whole cohort finishes.
+
+    ``carry`` is ``(SimState, cache, done)`` with a leading lane axis on
+    every leaf (see ``init_fleet_carry``); ``pol`` holds the LANE-VARYING
+    policy fields as ``[W]`` arrays, while ``static_pol`` carries the
+    branch-selecting fields (routing / traffic / placement) as Python ints
+    closed over at trace time — the cohort scheduler groups lanes so these
+    are uniform, which is what lets ``_activate`` / ``_place_batch`` /
+    ``fairshare.rates`` specialize their dispatch instead of executing
+    both branches of a batched ``lax.cond`` (the batch wall).
+
+    The caller jits (and on a multi-device mesh, shard_maps) the result;
+    between chunk invocations the fleet scheduler retires finished lanes,
+    compacts, and refills from its pending queue, so no lane runs more
+    than ``chunk_steps - 1`` wasted events past its own finish."""
+    meta = SimMeta.coerce(meta)
+    static_pol = dict(static_pol or {})
+
+    def lane_step(consts, pol_lane, aux, sc):
+        pol = {**pol_lane, **static_pol}
+        s, cache = _step(consts, meta, pol, aux, sc)
+        return s, cache, _finished(consts, meta, s)
+
+    vstep = jax.vmap(lane_step, in_axes=(None, 0, 0, 0))
+
+    def chunk(consts, pol, carry):
+        # loop-invariant per-lane tensors hoisted OUT of the while loop,
+        # mirroring the serial runner (XLA does not reliably hoist them
+        # out of a vmapped while body itself)
+        vaux = jax.vmap(
+            lambda p: _make_aux(consts, {**p, **static_pol}))(pol)
+
+        def cond(c):
+            i, (_s, _cache, done) = c
+            return (i < chunk_steps) & ~jnp.all(done)
+
+        def body(c):
+            i, (s, cache, done) = c
+            s2, cache2, done2 = vstep(consts, pol, vaux, (s, cache))
+            # freeze the STATE of finished lanes (it is the result the
+            # scheduler retires); the cache needs no select — it is never
+            # read into results, a finished lane's pseudo-steps leave its
+            # ready set empty, and a refill resets it from the t=0 carry.
+            # The chunk loop is UNBATCHED (vmap is inside vstep), so this
+            # cond really branches: with a well-bucketed cohort no lane is
+            # done until the tail of the chunk and the whole-state select
+            # (the widest memory traffic in the loop) is skipped.
+            s = jax.lax.cond(jnp.any(done),
+                             lambda: tree_select(done, s, s2),
+                             lambda: s2)
+            return i + 1, (s, cache2, done | done2)
+
+        return jax.lax.while_loop(cond, body, (0, carry))[1]
+
+    return chunk
 
 
 # --- deprecated shims ------------------------------------------------------

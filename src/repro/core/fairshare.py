@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 TRAFFIC_FAIRSHARE = 0  # paper Eq. 3
 TRAFFIC_WATERFILL = 1  # beyond-paper max-min fairness
@@ -116,7 +117,17 @@ def rates(policy: jnp.ndarray, route_links: jnp.ndarray, active: jnp.ndarray,
 
     ``nc`` is the optional precomputed channel-count tensor for the Eq. 3
     branch (water-filling recomputes per-link live counts each fill
-    iteration, so it has no use for a one-shot count)."""
+    iteration, so it has no use for a one-shot count).
+
+    A host-static ``policy`` (a plain Python/numpy int — fleet cohorts,
+    DESIGN.md §9) resolves the branch at trace time: under ``vmap`` a
+    ``lax.cond`` on a batched predicate executes BOTH branches, and the
+    32-iteration water-fill loop would tax every Eq.-3 step."""
+    if isinstance(policy, (bool, int, np.integer)) or (
+            isinstance(policy, np.ndarray) and policy.ndim == 0):
+        if int(policy) == TRAFFIC_WATERFILL:
+            return waterfill_rates(route_links, active, link_bw, intra_bw)
+        return eq3_rates(route_links, active, link_bw, intra_bw, nc=nc)
     return jax.lax.cond(
         policy == TRAFFIC_WATERFILL,
         lambda: waterfill_rates(route_links, active, link_bw, intra_bw),

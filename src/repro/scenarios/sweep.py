@@ -208,6 +208,17 @@ def pack_setups(setups: Sequence[SimSetup]
     return consts, meta
 
 
+def slice_packed(consts: EngineConsts, si: int) -> EngineConsts:
+    """Scenario ``si``'s unbatched ``EngineConsts`` view of a packed batch.
+
+    A plain leading-axis slice: every leaf keeps the PADDED dims, so the
+    packed ``SimMeta`` stays valid for the slice and states computed from
+    it stack back into the packed ``[S, P, ...]`` grid bit-exactly.  The
+    fleet layer (``repro.api.fleet``, DESIGN.md §9) feeds these per-cohort
+    consts to its chunk programs instead of vmapping the scenario axis."""
+    return jax.tree_util.tree_map(lambda a: a[si], consts)
+
+
 # ---------------------------------------------------------------------------
 # scenario × policy grid
 # ---------------------------------------------------------------------------
