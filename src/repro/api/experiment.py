@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core import policies as policy_mod
+from ..core.ctrlplane import CtrlPlaneConfig
 from ..core.engine import make_consts
 from ..core.failures import FailureSchedule
 from ..core.mapreduce import SimSetup
@@ -169,26 +170,34 @@ class Experiment:
         replicated per schedule, so the scenario axis becomes
         ``S = len(scenarios) * len(failures)`` — the failure-rate axis of
         ``benchmarks/failure_sweep.py``.
+    ctrl:
+        Optional control-plane configs (DESIGN.md §10).  One or a sequence
+        of: a ``CtrlPlaneConfig`` or a ``(name, config)`` pair.  Each
+        scenario is replicated per config — the install-latency axis of
+        ``benchmarks/ctrl_sweep.py``.  Composes with ``failures`` (the
+        cross is failures × ctrl per scenario).
     """
 
     def __init__(self, scenarios: Any, policies: Any = None,
                  seeds: Optional[Sequence[int]] = None,
-                 failures: Any = None):
+                 failures: Any = None, ctrl: Any = None):
         # consts are cacheable across Experiments only when every scenario
-        # is a bare registry name (deterministic rebuild) and no failure
-        # cross mutates the setups afterwards
+        # is a bare registry name (deterministic rebuild) and no failure /
+        # ctrl cross mutates the setups afterwards
         items = (list(scenarios)
                  if isinstance(scenarios, (list, tuple))
                  and not _is_pair(scenarios, in_sequence=False)
                  else [scenarios])
         self._consts_key = (tuple(items)
-                            if failures is None
+                            if failures is None and ctrl is None
                             and all(isinstance(i, str) for i in items)
                             else None)
         self.scenarios: List[Tuple[str, SimSetup]] = _normalize(
             scenarios, _build_scenario, "scenario")
         if failures is not None:
             self.scenarios = _cross_failures(self.scenarios, failures)
+        if ctrl is not None:
+            self.scenarios = _cross_ctrl(self.scenarios, ctrl)
         pols = _normalize(
             policies, lambda p: (_policy_label(p), p), "policy")
         if seeds is not None:
@@ -307,6 +316,33 @@ def _cross_failures(scenarios: List[Tuple[str, SimSetup]],
             sched.validate(topo.n_hosts, topo.n_links)
             name = f"{sname}/{fname}" if len(named) > 1 else sname
             out.append((name, dataclasses.replace(setup, failures=sched)))
+    return out
+
+
+def _cross_ctrl(scenarios: List[Tuple[str, SimSetup]],
+                ctrl: Any) -> List[Tuple[str, SimSetup]]:
+    """Replicate every scenario per control-plane config (names suffixed
+    with the config label when there is more than one) — mirrors
+    ``_cross_failures`` for the DESIGN.md §10 axis."""
+    if isinstance(ctrl, CtrlPlaneConfig) \
+            or _is_pair(ctrl, in_sequence=False):
+        ctrl = [ctrl]
+    named = []
+    for ci, item in enumerate(ctrl):
+        if _is_pair(item, in_sequence=True):
+            cname, cfg = item
+        else:
+            cname, cfg = f"c{ci}", item
+        if not isinstance(cfg, CtrlPlaneConfig):
+            raise TypeError(
+                f"cannot interpret {type(cfg).__name__} as a "
+                "CtrlPlaneConfig")
+        named.append((cname, cfg.validate()))
+    out = []
+    for sname, setup in scenarios:
+        for cname, cfg in named:
+            name = f"{sname}/{cname}" if len(named) > 1 else sname
+            out.append((name, dataclasses.replace(setup, ctrl=cfg)))
     return out
 
 

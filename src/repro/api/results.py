@@ -103,11 +103,19 @@ class Results:
         ``SweepResult.rows`` shape): valid-job completion/transmission
         means, energy, makespan, stall flag, and the recovery totals
         (re-executed tasks, rerouted packets, summed downtime —
-        DESIGN.md §7; all zero without a failure schedule)."""
+        DESIGN.md §7; all zero without a failure schedule) plus the
+        control-plane totals (flow-rule installs/evictions/reinstalls,
+        packet install wait, controller queueing, VM migrations —
+        DESIGN.md §10; all zero without a ctrl config)."""
         jr = self.job_report()
         er = self.energy_report()
         stalled = np.asarray(self.states.stalled)
         steps = np.asarray(self.states.steps)
+        installs = np.asarray(self.states.ctrl_installs)
+        evictions = np.asarray(self.states.ctrl_evictions)
+        reinstalls = np.asarray(self.states.ctrl_reinstalls)
+        queue_wait = np.asarray(self.states.ctrl_queue_wait)
+        migrations = np.asarray(self.states.vm_migrations).sum(axis=-1)
         out = []
         for si, sn in enumerate(self.scenario_names):
             for pi, pn in enumerate(self.policy_names):
@@ -128,5 +136,12 @@ class Results:
                         jr["pkt_reroutes"][si, pi])),
                     "downtime_s": float(np.nansum(
                         jr["downtime_s"][si, pi])),
+                    "install_wait_s": float(np.nansum(
+                        jr["install_wait_s"][si, pi])),
+                    "rule_installs": int(installs[si, pi]),
+                    "rule_evictions": int(evictions[si, pi]),
+                    "rule_reinstalls": int(reinstalls[si, pi]),
+                    "ctrl_queue_wait_s": float(queue_wait[si, pi]),
+                    "vm_migrations": int(migrations[si, pi]),
                 })
         return out

@@ -114,7 +114,8 @@ def _build(meta: SimMeta, kind: str) -> Callable:
     def init_one(consts, pol):
         del pol  # the t=0 state depends on consts only; pol carries the
         #          batch axes the vmapped variants map over
-        return init_state_from_consts(consts, meta.n_switches)
+        return init_state_from_consts(consts, meta.n_switches,
+                                      meta.ctrl_slots)
 
     if kind == "single":
         fn, init = counted, init_one

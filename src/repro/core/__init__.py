@@ -1,10 +1,13 @@
 """BigDataSDNSim core: vectorized DES of MapReduce x SDN x cloud (the paper)."""
+from .ctrlplane import CtrlPlaneConfig, no_ctrl
 from .energy import EnergyParams
 from .engine import (SimState, make_packed_simulator, make_simulator,
                      simulate, simulate_batch, simulate_scenarios)
 from .failures import FailureSchedule, host_crash, link_cut, no_failures
 from .mapreduce import ClusterSpec, JobSpec, SimSetup, build_setup
-from .policies import (JOBSEL_FCFS, JOBSEL_PRIORITY, JOBSEL_SJF,
+from .policies import (INSTALL_PROACTIVE, INSTALL_REACTIVE,
+                       JOBSEL_FCFS, JOBSEL_PRIORITY, JOBSEL_SJF,
+                       MIG_CONGESTION, MIG_STATIC,
                        PLACE_LEAST_USED, PLACE_RANDOM, PLACE_ROUND_ROBIN,
                        RECOVERY_RESTART, RECOVERY_RESUME,
                        ROUTE_LEGACY, ROUTE_SDN, TRAFFIC_FAIRSHARE,
@@ -25,10 +28,12 @@ __all__ = [
     "PolicyField", "SimMeta", "as_policy_arrays", "policy_field_names",
     "policy_fields", "register_policy_field",
     "FailureSchedule", "host_crash", "link_cut", "no_failures",
+    "CtrlPlaneConfig", "no_ctrl",
     "ROUTE_LEGACY", "ROUTE_SDN", "TRAFFIC_FAIRSHARE", "TRAFFIC_WATERFILL",
     "PLACE_LEAST_USED", "PLACE_ROUND_ROBIN", "PLACE_RANDOM",
     "JOBSEL_FCFS", "JOBSEL_SJF", "JOBSEL_PRIORITY",
     "RECOVERY_RESTART", "RECOVERY_RESUME",
+    "INSTALL_REACTIVE", "INSTALL_PROACTIVE", "MIG_STATIC", "MIG_CONGESTION",
     "energy_report", "job_report", "summarize",
     "RouteTable", "build_route_table",
     "GBPS", "Topology", "canonical_tree", "fat_tree", "leaf_spine",

@@ -41,11 +41,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import fairshare
+from .ctrlplane import no_ctrl
 from .failures import no_failures
-from .mapreduce import ACTIVE, DONE, SimSetup, VOID, WAITING
+from .mapreduce import ACTIVE, DONE, INSTALLING, SimSetup, VOID, WAITING
 from .energy import host_power, switch_power
-from .policies import (JOBSEL_PRIORITY, JOBSEL_SJF, PLACE_RANDOM,
-                       PLACE_ROUND_ROBIN, RECOVERY_RESTART, as_policy_arrays)
+from .policies import (INSTALL_PROACTIVE, JOBSEL_PRIORITY, JOBSEL_SJF,
+                       MIG_CONGESTION, PLACE_RANDOM, PLACE_ROUND_ROBIN,
+                       RECOVERY_RESTART, as_policy_arrays)
 from .routing import (ROUTE_SDN, flow_hash_u32, legacy_route_choice,
                       sdn_route_choice)
 from .simmeta import SimMeta
@@ -157,6 +159,23 @@ class EngineConsts(NamedTuple):
     # the same instants concatenated ([2*n_hosts + 2*n_links], inf=never):
     # the dt horizon mins over ONE tensor per step (DESIGN.md §8)
     fail_breaks: jnp.ndarray
+    # control plane (DESIGN.md §10): scalar resource parameters — the
+    # identity values (0 latency, inf rate, inf threshold) when the replica
+    # carries no CtrlPlaneConfig, so a packed sweep can mix configs.
+    # ctrl_on gates the install/pre-pin paths per replica: an identity-
+    # config lane in a mixed batch must bypass the controller entirely
+    # (zero counters), not merely pay zero latency for it
+    ctrl_on: jnp.ndarray        # bool []: this replica's config is live
+    ctrl_latency: jnp.ndarray   # f32 []: flow-mod propagation latency (s)
+    ctrl_rate: jnp.ndarray      # f32 []: controller rule installs per second
+    mig_threshold: jnp.ndarray  # f32 []: aggregate route-hop migration trigger
+    mig_cost: jnp.ndarray       # f32 []: compute pause per migration (s)
+    mig_cooldown: jnp.ndarray   # f32 []: min quiet time between migrations
+    mig_limit: jnp.ndarray      # i32 []: total migration budget per run
+    # candidate-0 hop count per (src*n_nodes+dst) pair — the migration
+    # policy's distance estimate; 0 on the diagonal, UNREACHABLE_HOPS where
+    # no route exists
+    pair_hops: jnp.ndarray      # i32 [n_nodes^2]
 
 
 class SimState(NamedTuple):
@@ -194,6 +213,26 @@ class SimState(NamedTuple):
     task_restarts: jnp.ndarray  # int32 [n_tasks]: YARN re-executions
     pkt_reroutes: jnp.ndarray   # int32 [n_packets]: failure-driven reverts
     job_downtime: jnp.ndarray   # f32 [n_jobs]: admitted-but-zero-progress s
+    # control plane (DESIGN.md §10).  All of it rides in the carry so the
+    # flow-table / controller-queue evolution stays inside the one
+    # while_loop; with has_ctrl=False every field passes through untouched.
+    vm_host: jnp.ndarray        # i32 [n_vms]: LIVE placement (migration
+    #                             re-homes VMs; == c.vm_host when static)
+    ftab_pair: jnp.ndarray      # i32 [n_switches, ctrl_slots]: cached pair
+    #                             per flow-table slot (-1 = empty)
+    ftab_ready: jnp.ndarray     # f32 [n_switches, ctrl_slots]: instant the
+    #                             slot's rule finishes installing
+    ftab_stamp: jnp.ndarray     # i32 [n_switches, ctrl_slots]: LRU stamp
+    ctrl_busy: jnp.ndarray      # f32 []: controller next-free instant
+    ctrl_stamp: jnp.ndarray     # i32 []: monotone LRU counter
+    ctrl_installs: jnp.ndarray  # i32 []: rule installs requested
+    ctrl_evictions: jnp.ndarray # i32 []: rules LRU-displaced (or uncached)
+    ctrl_reinstalls: jnp.ndarray  # i32 []: installs for churn-evicted flows
+    ctrl_queue_wait: jnp.ndarray  # f32 []: summed wait in the ctrl queue
+    pkt_ready_t: jnp.ndarray    # f32 [n_packets]: INSTALLING wake instant
+    pkt_install_wait: jnp.ndarray  # f32 [n_packets]: summed install stall
+    vm_mig_until: jnp.ndarray   # f32 [n_vms]: migration compute-pause end
+    vm_migrations: jnp.ndarray  # i32 [n_vms]: re-homings taken
 
 
 def default_max_steps(setup: SimSetup) -> int:
@@ -205,10 +244,38 @@ def default_max_steps(setup: SimSetup) -> int:
     the compiled-runner cache (DESIGN.md §6)."""
     base = 4 * (setup.n_packets + setup.n_tasks) + 4 * setup.n_jobs + 64
     sched = setup.failures
+    steps = base
+    quantize = False
     if sched is not None and sched.any_failures:
-        exact = base * (1 + sched.n_events) + 2 * sched.n_events
-        return 1 << (exact - 1).bit_length()
-    return base
+        steps = base * (1 + sched.n_events) + 2 * sched.n_events
+        quantize = True
+    cfg = setup.ctrl
+    if cfg is not None and cfg.any_ctrl:
+        # reactive installation splits each packet activation into a
+        # park + wake pair (one extra breakpoint per packet), and every
+        # migration can revert + re-run every in-flight packet once
+        # (DESIGN.md §10) — same quantization rationale as failures
+        steps = 2 * steps + cfg.mig_limit * (3 * setup.n_packets + 4)
+        quantize = True
+    if quantize:
+        return 1 << (steps - 1).bit_length()
+    return steps
+
+
+UNREACHABLE_HOPS = 1 << 20  # pair_hops sentinel: no candidate route
+
+
+def pair_hops_np(route_len, n_cand, n_nodes: int) -> np.ndarray:
+    """Host-side candidate-0 hop count per node pair (the migration cost
+    estimate, DESIGN.md §10): 0 on the diagonal (intra-host is free),
+    ``UNREACHABLE_HOPS`` where no route exists.  Static per route table —
+    shared by make_consts and the packed-sweep builder."""
+    hops = np.where(np.asarray(n_cand) > 0,
+                    np.asarray(route_len)[:, 0], UNREACHABLE_HOPS)
+    hops = hops.astype(np.int32).copy()
+    diag = np.arange(n_nodes, dtype=np.int64)
+    hops[diag * n_nodes + diag] = 0
+    return hops
 
 
 def make_consts(setup: SimSetup) -> tuple[EngineConsts, SimMeta]:
@@ -218,6 +285,7 @@ def make_consts(setup: SimSetup) -> tuple[EngineConsts, SimMeta]:
         sched = no_failures(cl.topo.n_hosts, cl.topo.n_links)
     else:
         sched.validate(cl.topo.n_hosts, cl.topo.n_links)
+    cfg = (setup.ctrl or no_ctrl()).validate()
     consts = EngineConsts(
         routes=jnp.asarray(rt.routes),
         n_cand=jnp.asarray(rt.n_cand),
@@ -258,6 +326,15 @@ def make_consts(setup: SimSetup) -> tuple[EngineConsts, SimMeta]:
         link_fail_t=jnp.asarray(sched.link_fail_t, jnp.float32),
         link_recover_t=jnp.asarray(sched.link_recover_t, jnp.float32),
         fail_breaks=jnp.asarray(sched.instants(), jnp.float32),
+        ctrl_on=jnp.asarray(cfg.any_ctrl),
+        ctrl_latency=jnp.asarray(cfg.install_latency, jnp.float32),
+        ctrl_rate=jnp.asarray(cfg.ctrl_rate, jnp.float32),
+        mig_threshold=jnp.asarray(cfg.mig_threshold, jnp.float32),
+        mig_cost=jnp.asarray(cfg.mig_cost, jnp.float32),
+        mig_cooldown=jnp.asarray(cfg.mig_cooldown, jnp.float32),
+        mig_limit=jnp.asarray(cfg.mig_limit, jnp.int32),
+        pair_hops=jnp.asarray(pair_hops_np(rt.route_len, rt.n_cand,
+                                           cl.topo.n_nodes)),
     )
     meta = SimMeta(
         n_nodes=cl.topo.n_nodes,
@@ -269,17 +346,22 @@ def make_consts(setup: SimSetup) -> tuple[EngineConsts, SimMeta]:
         energy=cl.energy,
         max_steps=default_max_steps(setup),
         has_failures=sched.any_failures,
+        has_ctrl=cfg.any_ctrl,
+        ctrl_slots=cfg.table_slots if cfg.any_ctrl else 0,
     )
     return consts, meta
 
 
-def init_state_from_consts(c: EngineConsts, n_switches: int) -> SimState:
+def init_state_from_consts(c: EngineConsts, n_switches: int,
+                           ctrl_slots: int = 0) -> SimState:
     """t=0 state derived purely from (possibly padded) const tensors.
 
     ``n_switches`` is the STATIC switch-tensor length (padded max in a
     multi-scenario sweep) — it cannot be read off any consts array, every
     other shape can.  Pad job/task/packet slots start VOID/zero so they are
-    inert for the whole run (DESIGN.md §5).
+    inert for the whole run (DESIGN.md §5).  ``ctrl_slots`` is the static
+    per-switch flow-table width (``SimMeta.ctrl_slots``) — 0 gives the
+    flow-table tensors a zero-length slot axis (DESIGN.md §10).
     """
     n_j = c.job_release.shape[0]
     n_t = c.task_job.shape[0]
@@ -313,12 +395,26 @@ def init_state_from_consts(c: EngineConsts, n_switches: int) -> SimState:
         task_restarts=jnp.zeros(n_t, jnp.int32),
         pkt_reroutes=jnp.zeros(n_p, jnp.int32),
         job_downtime=jnp.zeros(n_j, f),
+        vm_host=c.vm_host.astype(jnp.int32),
+        ftab_pair=jnp.full((n_switches, ctrl_slots), -1, jnp.int32),
+        ftab_ready=jnp.zeros((n_switches, ctrl_slots), f),
+        ftab_stamp=jnp.zeros((n_switches, ctrl_slots), jnp.int32),
+        ctrl_busy=f(0.0),
+        ctrl_stamp=jnp.int32(0),
+        ctrl_installs=jnp.int32(0),
+        ctrl_evictions=jnp.int32(0),
+        ctrl_reinstalls=jnp.int32(0),
+        ctrl_queue_wait=f(0.0),
+        pkt_ready_t=jnp.full(n_p, jnp.inf, f),
+        pkt_install_wait=jnp.zeros(n_p, f),
+        vm_mig_until=jnp.zeros(c.vm_host.shape[0], f),
+        vm_migrations=jnp.zeros(c.vm_host.shape[0], jnp.int32),
     )
 
 
 def init_state(setup: SimSetup) -> SimState:
     consts, meta = make_consts(setup)
-    return init_state_from_consts(consts, meta.n_switches)
+    return init_state_from_consts(consts, meta.n_switches, meta.ctrl_slots)
 
 
 # ---------------------------------------------------------------------------
@@ -332,6 +428,15 @@ def _effective_link_bw(c: EngineConsts, meta, s: SimState) -> jnp.ndarray:
     if meta.has_failures:
         return jnp.where(s.link_dead, 0.0, c.link_bw)
     return c.link_bw
+
+
+def _vm_host(c: EngineConsts, meta, s: SimState) -> jnp.ndarray:
+    """Effective VM -> host placement: the MUTABLE ``s.vm_host`` when the
+    control plane is on (migration re-homes VMs — DESIGN.md §10), else the
+    static ``c.vm_host`` — the no-ctrl trace is unchanged."""
+    if meta.has_ctrl:
+        return s.vm_host
+    return c.vm_host
 
 
 def _apply_failures(c: EngineConsts, meta, pol, s: SimState, cache):
@@ -375,18 +480,26 @@ def _apply_failures(c: EngineConsts, meta, pol, s: SimState, cache):
         # packets first: endpoints must resolve against the ACTIVATION-time
         # placement, i.e. before any task unplaces below.
         n_hosts_pad = c.host_fail_t.shape[0]
-        src_node, dst_node = _pkt_endpoints(c, s)
+        src_node, dst_node = _pkt_endpoints(c, meta, s)
         p_active = s.pkt_state == ACTIVE
-        links = _route_links(c, s, p_active)
-        route_hit = p_active & jnp.any(
+        if meta.has_ctrl:
+            # a routed packet is also one parked in INSTALLING or one the
+            # proactive pass pre-pinned while WAITING (DESIGN.md §10) —
+            # a dead link/endpoint invalidates those routes too
+            routed = (p_active | (s.pkt_state == INSTALLING)
+                      | ((s.pkt_state == WAITING) & (s.pkt_cand >= 0)))
+        else:
+            routed = p_active
+        links = _route_links(c, s, routed)
+        route_hit = routed & jnp.any(
             (links >= 0) & new_l[jnp.maximum(links, 0)], axis=-1)
 
         def _endpoint_died(node):
             return (node < c.n_hosts) & new_h[jnp.clip(node, 0,
                                                        n_hosts_pad - 1)]
 
-        ep_hit = p_active & (_endpoint_died(src_node)
-                             | _endpoint_died(dst_node))
+        ep_hit = routed & (_endpoint_died(src_node)
+                           | _endpoint_died(dst_node))
         hit_p = route_hit | ep_hit
         pkt_state = jnp.where(hit_p, WAITING, s.pkt_state)
         pkt_rem = jnp.where(ep_hit & restart, c.pkt_bits.astype(jnp.float32),
@@ -394,10 +507,19 @@ def _apply_failures(c: EngineConsts, meta, pol, s: SimState, cache):
         pkt_pair = jnp.where(hit_p, -1, s.pkt_pair)
         pkt_cand = jnp.where(hit_p, -1, s.pkt_cand)
         pkt_reroutes = s.pkt_reroutes + hit_p.astype(jnp.int32)
+        if meta.has_ctrl:
+            # a reverted INSTALLING packet re-requests its rules later
+            s = s._replace(pkt_ready_t=jnp.where(hit_p, jnp.inf,
+                                                 s.pkt_ready_t))
+            # only the packets that were ACTIVE hold channels to release
+            hit_drop = hit_p & p_active
+        else:
+            hit_drop = hit_p
 
         # tasks on newly-dead hosts
         vm_safe = jnp.maximum(s.task_vm, 0)
-        task_host = jnp.clip(c.vm_host[vm_safe], 0, n_hosts_pad - 1)
+        task_host = jnp.clip(_vm_host(c, meta, s)[vm_safe], 0,
+                             n_hosts_pad - 1)
         hit_t = (c.task_valid & (s.task_vm >= 0) & new_h[task_host]
                  & ((s.task_state == ACTIVE) | (s.task_state == WAITING)))
         task_state = jnp.where(hit_t, WAITING, s.task_state)
@@ -431,13 +553,13 @@ def _apply_failures(c: EngineConsts, meta, pol, s: SimState, cache):
 
         def drop_one(k, carry):
             nc, cursor = carry
-            i = jnp.min(jnp.where(hit_p & (pidx > cursor), pidx, n_p))
+            i = jnp.min(jnp.where(hit_drop & (pidx > cursor), pidx, n_p))
             links_k = links[jnp.minimum(i, n_p - 1)]
             nc = nc - jnp.sum((links_k[:, None] == liota[None, :])
                               .astype(jnp.int32), axis=0)
             return nc, i
 
-        nc, _ = jax.lax.fori_loop(0, jnp.sum(hit_p.astype(jnp.int32)),
+        nc, _ = jax.lax.fori_loop(0, jnp.sum(hit_drop.astype(jnp.int32)),
                                   drop_one, (nc0, jnp.int32(-1)))
         return s, nc
 
@@ -515,7 +637,7 @@ def _place_batch(c: EngineConsts, meta, pol, aux, s: SimState, mine, pos,
                       place_counter=counter0 + n_mine)
 
 
-def _admit_and_place(c: EngineConsts, meta, pol, aux, s: SimState) -> SimState:
+def _admit_and_place(c: EngineConsts, meta, pol, aux, s: SimState):
     """Admit released jobs (job-selection policy) while concurrency slots are
     free; place each admitted job's tasks onto VMs (placement policy).
 
@@ -532,16 +654,18 @@ def _admit_and_place(c: EngineConsts, meta, pol, aux, s: SimState) -> SimState:
     re-places unplaced tasks of already-admitted jobs (YARN re-execution
     after a host loss).
 
-    Returns ``(s, placed)``: the flag is True iff any task placement
-    changed this step — ``_step`` uses it to refresh the packet-endpoint
-    cache only when needed."""
+    Returns ``(s, placed, admit_now)``: ``placed`` is True iff any task
+    placement changed this step — ``_step`` uses it to refresh the
+    packet-endpoint cache only when needed; ``admit_now`` marks the jobs
+    admitted THIS step (the proactive install pass pre-pins exactly their
+    packets — DESIGN.md §10)."""
     # live VM count (c.n_vms) may be smaller than the padded tensor length
     # in a packed multi-scenario sweep — pad slots must never win placement.
     n_vms = c.n_vms
     vm_live = jnp.arange(meta.n_vms) < n_vms
     if meta.has_failures:
         vm_live = vm_live & ~s.host_dead[
-            jnp.clip(c.vm_host, 0, c.host_fail_t.shape[0] - 1)]
+            jnp.clip(_vm_host(c, meta, s), 0, c.host_fail_t.shape[0] - 1)]
     n_live = jnp.sum(vm_live.astype(jnp.int32))
 
     n_j = s.job_admitted.shape[0]
@@ -603,7 +727,7 @@ def _admit_and_place(c: EngineConsts, meta, pol, aux, s: SimState) -> SimState:
                 n_live),
             lambda s: s, s)
         placed = placed | jnp.any(orphaned)
-    return s, placed
+    return s, placed, admit_now
 
 
 def _route_links(c: EngineConsts, s: SimState, mask: jnp.ndarray) -> jnp.ndarray:
@@ -618,16 +742,18 @@ NODE_OFFSET = 1 << 20  # pkt_src/dst_task >= NODE_OFFSET encodes a direct
                        # node id (flow-level frontend, core.flows)
 
 
-def _pkt_endpoints(c: EngineConsts, s: SimState):
-    """Resolve src/dst node of every packet from current task placement.
+def _pkt_endpoints(c: EngineConsts, meta, s: SimState):
+    """Resolve src/dst node of every packet from current task placement
+    (the LIVE placement under migration — ``_vm_host``, DESIGN.md §10).
 
     -1 -> SAN storage; >= NODE_OFFSET -> direct node id; else task id."""
     n_tasks = s.task_vm.shape[0]
+    vm_host = _vm_host(c, meta, s)
 
     def node_of(task_idx):
         t = jnp.clip(task_idx, 0, n_tasks - 1)
         vm = jnp.maximum(s.task_vm[t], 0)
-        node = jnp.where(task_idx < 0, c.storage_node, c.vm_host[vm])
+        node = jnp.where(task_idx < 0, c.storage_node, vm_host[vm])
         return jnp.where(task_idx >= NODE_OFFSET,
                          task_idx - NODE_OFFSET, node).astype(jnp.int32)
     return node_of(c.pkt_src_task), node_of(c.pkt_dst_task)
@@ -644,7 +770,7 @@ def _endpoint_cache(c: EngineConsts, meta, s: SimState):
     harmless: with failures enabled ``_activate``'s ``_ep_placed`` check
     (which reads ``task_vm`` live) blocks them, and without failures every
     valid task of an admitted job is placed at admission."""
-    src_node, dst_node = _pkt_endpoints(c, s)
+    src_node, dst_node = _pkt_endpoints(c, meta, s)
     pair = (src_node * meta.n_nodes + dst_node).astype(jnp.int32)
     # unreachable pairs (no candidate route, different nodes) never
     # activate -> the engine reports a stall instead of free transfer
@@ -849,6 +975,409 @@ def _activate(c: EngineConsts, meta, pol, aux, cache, s: SimState):
     return s, links, p_active, nc, link_bw
 
 
+def _ctrl_request(c: EngineConsts, meta, pair, links, active_req,
+                  pre_routed, t, tbl):
+    """One flow's rule lookup + install request against the flow-table /
+    controller carry (DESIGN.md §10).
+
+    ``tbl`` = ``(ftab_pair, ftab_ready, ftab_stamp, ctrl_busy, ctrl_stamp,
+    installs, evictions, reinstalls, queue_wait)``; returns
+    ``(ready, tbl')`` where ``ready`` is the instant every rule on the
+    route is usable.  ``active_req`` gates EVERY mutation (False = a pure
+    lookup pass-through); ``pre_routed`` marks a flow that held a route
+    before (its misses are churn: counted as reinstalls too).
+
+    The route's switch hops are found from the link sources (routes are
+    simple paths, so a route visits each switch at most once — the one-hot
+    table writes below never collide).  Each miss takes one controller
+    service slot FIFO behind ``ctrl_busy`` (``begin = max(t, busy)``,
+    ``svc = misses / rate``) plus the flow-mod latency; cache hits are
+    free but the flow still waits for any hit entry that is itself mid-
+    install.  A missing rule lands in its switch's first empty slot, else
+    the least-recently-stamped one (LRU); displacing a live entry counts
+    an eviction.  With ``ctrl_slots == 0`` (no caching) every install is
+    evicted immediately, so ``occupied == installs - evictions`` holds for
+    every config (the conservation law, tests/test_fairshare.py)."""
+    (fpair, fready, fstamp, busy, stamp, installs, evicts, reinst,
+     qwait) = tbl
+    T = meta.ctrl_slots
+    nodes = c.link_src[jnp.maximum(links, 0)]
+    # switch node ids sit at [n_hosts, n_hosts + n_switches) — the PADDED
+    # offsets in a packed sweep, same convention as the energy port count
+    is_sw = ((links >= 0) & (nodes >= meta.n_hosts)
+             & (nodes < meta.n_hosts + meta.n_switches))
+    sw = jnp.where(is_sw, nodes - meta.n_hosts, 0)       # [H], clipped
+    if T > 0:
+        rows = fpair[sw]                                 # [H, T]
+        hitmask = (rows == pair) & is_sw[:, None]
+        hit = jnp.any(hitmask, axis=1)
+        hit_ready = jnp.max(jnp.where(hitmask, fready[sw], -_INF))
+    else:
+        hit = jnp.zeros_like(is_sw)
+        hit_ready = -_INF
+    miss = is_sw & ~hit
+    m = jnp.sum(miss.astype(jnp.int32))
+    begin = jnp.maximum(t, busy)
+    svc = m.astype(jnp.float32) / c.ctrl_rate            # inf rate -> 0
+    ready = jnp.maximum(jnp.maximum(
+        jnp.where(m > 0, begin + svc + c.ctrl_latency, -_INF),
+        hit_ready), t)
+    do_install = active_req & (m > 0)
+    busy = jnp.where(do_install, begin + svc, busy)
+    qwait = qwait + jnp.where(do_install, begin - t, 0.0)
+    installs = installs + jnp.where(active_req, m, 0)
+    reinst = reinst + jnp.where(active_req & pre_routed, m, 0)
+    if T > 0:
+        sw_iota = jnp.arange(meta.n_switches, dtype=jnp.int32)
+        new_stamp = stamp + 1
+        # LRU victim per route hop: empty slots (key -1) win over any
+        # stamp, then oldest stamp, ties to the lowest slot index
+        key = jnp.where(rows < 0, -1, fstamp[sw])        # [H, T]
+        slot = jnp.argmin(key, axis=1)                   # [H]
+        displaced = jnp.take_along_axis(rows, slot[:, None],
+                                        axis=1)[:, 0] >= 0
+        evicts = evicts + jnp.where(
+            do_install, jnp.sum((miss & displaced).astype(jnp.int32)), 0)
+        # [H, SW, T] one-hot masks contracted over the route-hop axis —
+        # NOT scatters (batched scatters serialize per lane, DESIGN.md §9)
+        write_h = miss & do_install
+        touch_h = hit & active_req
+        sw_oh = (sw[:, None] == sw_iota[None, :]) & is_sw[:, None]
+        slot_oh = slot[:, None] == jnp.arange(T, dtype=jnp.int32)[None, :]
+        wmask = jnp.any(sw_oh[:, :, None]
+                        & (write_h[:, None] & slot_oh)[:, None, :], axis=0)
+        tmask = jnp.any(sw_oh[:, :, None]
+                        & (hitmask & touch_h[:, None])[:, None, :], axis=0)
+        fpair = jnp.where(wmask, pair, fpair)
+        fready = jnp.where(wmask, ready, fready)
+        fstamp = jnp.where(wmask | tmask, new_stamp, fstamp)
+        stamp = jnp.where(active_req, new_stamp, stamp)
+    else:
+        # no caching: nothing is retained, so every install is counted
+        # displaced immediately — the conservation law stays exact
+        evicts = evicts + jnp.where(do_install, m, 0)
+    return ready, (fpair, fready, fstamp, busy, stamp, installs, evicts,
+                   reinst, qwait)
+
+
+def _ctrl_tbl(s: SimState):
+    return (s.ftab_pair, s.ftab_ready, s.ftab_stamp, s.ctrl_busy,
+            s.ctrl_stamp, s.ctrl_installs, s.ctrl_evictions,
+            s.ctrl_reinstalls, s.ctrl_queue_wait)
+
+
+def _with_ctrl_tbl(s: SimState, tbl) -> SimState:
+    (fpair, fready, fstamp, busy, stamp, installs, evicts, reinst,
+     qwait) = tbl
+    return s._replace(
+        ftab_pair=fpair, ftab_ready=fready, ftab_stamp=fstamp,
+        ctrl_busy=busy, ctrl_stamp=stamp, ctrl_installs=installs,
+        ctrl_evictions=evicts, ctrl_reinstalls=reinst,
+        ctrl_queue_wait=qwait)
+
+
+def _activate_ctrl(c: EngineConsts, meta, pol, aux, cache, s: SimState):
+    """Packet activation with the control plane in the loop (DESIGN.md
+    §10) — replaces ``_activate``'s routing dispatch when
+    ``meta.has_ctrl`` (``_activate`` itself is untouched: the off switch
+    must trace the exact pre-control-plane program).
+
+    One compacted pop-order scan (ascending packet index — the same order
+    every plain path uses) over the union of the newly-ready set and the
+    WAKE set: INSTALLING packets whose ``pkt_ready_t`` has arrived.  Per
+    popped packet:
+
+      * legacy routing bypasses the controller entirely — the static hash
+        pick needs no flow-mod round trip — and activates immediately;
+        that asymmetry is what lets legacy BEAT a slow controller
+        (benchmarks/ctrl_sweep.py);
+      * an SDN packet resolves its route (the stored candidate when the
+        proactive pass pre-pinned one, else the live bottleneck pick) and
+        requests its missing rules via ``_ctrl_request`` — unless the
+        replica's ``ctrl_on`` is False (an identity-config lane in a mixed
+        packed sweep bypasses the controller like legacy: zero counters).
+        ``ready <= t`` (all rules cached and usable)
+        activates in the SAME iteration, keeping the
+        channel-bump order identical to the plain engine; otherwise the
+        packet parks in INSTALLING with ``pkt_ready_t = ready`` joining
+        the analytic dt min, and accrues ``pkt_install_wait``;
+      * a woken packet activates unconditionally on its stored route: its
+        rules WERE installed at request time, and later LRU churn only
+        affects FUTURE flows — re-blocking a woken packet on a re-lookup
+        could livelock two flows thrashing one slot.
+
+    Only activating packets bump the channel counts (an INSTALLING packet
+    holds no links), so the carried ``nc`` stays exact."""
+    # tasks: identical to _activate
+    t_ready = ((s.task_state == WAITING) & (s.task_got >= c.task_need)
+               & (s.task_vm >= 0))
+    s = s._replace(task_state=jnp.where(t_ready, ACTIVE, s.task_state),
+                   task_start=jnp.where(t_ready, s.time, s.task_start))
+
+    # ready set: same gates as _activate
+    gate = c.pkt_gate_task
+    gate_ok = jnp.where(gate < 0, True,
+                        s.task_state[jnp.maximum(gate, 0)] == DONE)
+    admitted = s.job_admitted[jnp.maximum(c.pkt_job, 0)]
+    p_ready = (s.pkt_state == WAITING) & admitted & gate_ok & c.pkt_valid
+    pair_all = cache["pair"]
+    p_ready = p_ready & cache["reachable"]
+    if meta.has_failures:
+        n_tasks = s.task_vm.shape[0]
+
+        def _ep_placed(ref):
+            is_task = (ref >= 0) & (ref < NODE_OFFSET)
+            return jnp.where(is_task,
+                             s.task_vm[jnp.clip(ref, 0, n_tasks - 1)] >= 0,
+                             True)
+
+        p_ready = (p_ready & _ep_placed(c.pkt_src_task)
+                   & _ep_placed(c.pkt_dst_task))
+    p_wake = (s.pkt_state == INSTALLING) & (s.pkt_ready_t <= s.time)
+    pop = p_ready | p_wake
+
+    link_bw = _effective_link_bw(c, meta, s)
+    n_p = pop.shape[0]
+    n_l = cache["nc"].shape[0]
+    idx = jnp.arange(n_p, dtype=jnp.int32)
+    liota = jnp.arange(n_l, dtype=jnp.int32)
+    n_pop = jnp.sum(pop.astype(jnp.int32))
+    legacy_cand = legacy_route_choice(c.n_cand[pair_all], aux["pkt_hash"])
+    is_sdn = pol["routing"] == ROUTE_SDN
+    t_now = s.time
+
+    def pop_one(k, carry):
+        (nc, pkt_state, pkt_pair, pkt_cand, pkt_start, pkt_ready_t,
+         pkt_wait, tbl, cursor) = carry
+        i = jnp.min(jnp.where(pop & (idx > cursor), idx, n_p))
+        safe = jnp.minimum(i, n_p - 1)
+        woken = p_wake[safe]
+        pre_routed = pkt_cand[safe] >= 0
+        pair = jnp.where(pre_routed, pkt_pair[safe], pair_all[safe])
+        cand = jnp.where(
+            pre_routed, pkt_cand[safe],
+            jnp.where(is_sdn,
+                      sdn_route_choice(c.routes[pair], c.n_cand[pair],
+                                       link_bw, nc),
+                      legacy_cand[safe]))
+        links = c.routes[pair, cand]                     # [H]
+        needs_ctrl = is_sdn & ~woken & c.ctrl_on
+        ready, tbl = _ctrl_request(c, meta, pair, links, needs_ctrl,
+                                   pre_routed & ~woken, t_now, tbl)
+        act_now = woken | ~needs_ctrl | (ready <= t_now)
+        oh = idx == i
+        start_i = jnp.where(jnp.isnan(pkt_start[safe]), t_now,
+                            pkt_start[safe])
+        pkt_state = jnp.where(oh, jnp.where(act_now, ACTIVE, INSTALLING),
+                              pkt_state)
+        pkt_pair = jnp.where(oh, pair, pkt_pair)
+        pkt_cand = jnp.where(oh, cand, pkt_cand)
+        pkt_start = jnp.where(oh, start_i, pkt_start)
+        pkt_ready_t = jnp.where(oh, jnp.where(act_now, _INF, ready),
+                                pkt_ready_t)
+        pkt_wait = pkt_wait + jnp.where(
+            oh & ~act_now, jnp.maximum(ready - t_now, 0.0), 0.0)
+        bump = jnp.sum(((links[:, None] == liota[None, :])
+                        & (links >= 0)[:, None]).astype(jnp.int32), axis=0)
+        nc = nc + bump * act_now.astype(jnp.int32)
+        return (nc, pkt_state, pkt_pair, pkt_cand, pkt_start, pkt_ready_t,
+                pkt_wait, tbl, i)
+
+    carry0 = (cache["nc"], s.pkt_state, s.pkt_pair, s.pkt_cand,
+              s.pkt_start, s.pkt_ready_t, s.pkt_install_wait, _ctrl_tbl(s),
+              jnp.int32(-1))
+    (nc, pkt_state, pkt_pair, pkt_cand, pkt_start, pkt_ready_t, pkt_wait,
+     tbl, _) = jax.lax.fori_loop(0, n_pop, pop_one, carry0)
+    s = _with_ctrl_tbl(s._replace(
+        pkt_state=pkt_state, pkt_pair=pkt_pair, pkt_cand=pkt_cand,
+        pkt_start=pkt_start, pkt_ready_t=pkt_ready_t,
+        pkt_install_wait=pkt_wait), tbl)
+
+    p_active = s.pkt_state == ACTIVE
+    links = _route_links(c, s, p_active)
+    return s, links, p_active, nc, link_bw
+
+
+def _preinstall(c: EngineConsts, meta, pol, aux, cache, s: SimState,
+                admit_now) -> SimState:
+    """Proactive flow-rule installation at job admission (DESIGN.md §10):
+    scan the newly-admitted jobs' unrouted packets in index order, resolve
+    each against the admission-time placement, install the missing rules
+    (advancing the controller queue) and pin the route in
+    ``pkt_pair``/``pkt_cand``.  The packets stay WAITING — their phase
+    gates still apply — but by first use the rules are (usually) already
+    cached, so the install latency overlaps compute instead of stalling
+    the transfer; churn-evicted pins fall back to the reactive path and
+    count as reinstalls.
+
+    The route picks use a SCRATCH channel view (the live counts plus each
+    earlier pin) so a job's flows spread over candidates the way the
+    reactive controller would spread them — but pinned at admission time,
+    blind to the traffic that develops later.  That lost adaptivity is
+    proactive's intrinsic trade against reactive's install stall."""
+    mask = (c.pkt_valid & admit_now[jnp.maximum(c.pkt_job, 0)]
+            & (s.pkt_cand < 0) & cache["reachable"] & c.ctrl_on)
+    pair_all = cache["pair"]
+    link_bw = _effective_link_bw(c, meta, s)
+    n_p = mask.shape[0]
+    n_l = cache["nc"].shape[0]
+    idx = jnp.arange(n_p, dtype=jnp.int32)
+    liota = jnp.arange(n_l, dtype=jnp.int32)
+    t_now = s.time
+
+    def pre_one(k, carry):
+        pkt_pair, pkt_cand, tbl, snc, cursor = carry
+        i = jnp.min(jnp.where(mask & (idx > cursor), idx, n_p))
+        safe = jnp.minimum(i, n_p - 1)
+        pair = pair_all[safe]
+        cand = sdn_route_choice(c.routes[pair], c.n_cand[pair], link_bw,
+                                snc)
+        links = c.routes[pair, cand]
+        _, tbl = _ctrl_request(c, meta, pair, links, jnp.asarray(True),
+                               jnp.asarray(False), t_now, tbl)
+        oh = idx == i
+        pkt_pair = jnp.where(oh, pair, pkt_pair)
+        pkt_cand = jnp.where(oh, cand, pkt_cand)
+        snc = snc + jnp.sum(((links[:, None] == liota[None, :])
+                             & (links >= 0)[:, None]).astype(jnp.int32),
+                            axis=0)
+        return pkt_pair, pkt_cand, tbl, snc, i
+
+    carry0 = (s.pkt_pair, s.pkt_cand, _ctrl_tbl(s), cache["nc"],
+              jnp.int32(-1))
+    pkt_pair, pkt_cand, tbl, _, _ = jax.lax.fori_loop(
+        0, jnp.sum(mask.astype(jnp.int32)), pre_one, carry0)
+    return _with_ctrl_tbl(
+        s._replace(pkt_pair=pkt_pair, pkt_cand=pkt_cand), tbl)
+
+
+def _maybe_migrate(c: EngineConsts, meta, pol, s: SimState, cache):
+    """Migrate-on-congestion dynamic placement (DESIGN.md §10, the S-CORE
+    direction): at most one VM per step re-homes when its aggregate
+    route-hop cost over active packets exceeds ``mig_threshold``.
+
+    cost(v) = sum of current-route hop counts (``pair_hops``) over ACTIVE
+    packets whose src or dst task runs on v.  The costliest eligible VM
+    (over threshold, out of cooldown, global ``mig_limit`` not exhausted)
+    moves to the live host minimizing the estimated cost — candidate-0
+    hops of each of its packets' pairs with the VM's endpoint re-homed —
+    requiring strict improvement over the same estimate at the current
+    host.  The move is controller-mediated (one service slot), live: the
+    VM's tasks keep their slot but execute nothing until ``vm_mig_until``
+    (which joins the dt min), while every routed packet touching the VM
+    reverts to WAITING through the PR-4 revert machinery (active ones
+    release their channels) and re-routes against the new placement.
+
+    Returns ``(s, cache, migrated)``; ``migrated`` forces the endpoint
+    cache refresh in ``_step``."""
+    mig_static = static_policy_value(pol["migration"])
+    if mig_static is not None and mig_static != MIG_CONGESTION:
+        return s, cache, jnp.asarray(False)
+    n_vms = meta.n_vms
+    n_t = s.task_vm.shape[0]
+    n_p = s.pkt_state.shape[0]
+    n_pairs = c.pair_hops.shape[0]
+
+    def attempt(args):
+        s, nc0 = args
+        t = s.time
+        viota = jnp.arange(n_vms, dtype=jnp.int32)
+
+        def ep_vm(ref):
+            is_task = (ref >= 0) & (ref < NODE_OFFSET)
+            vm = s.task_vm[jnp.clip(ref, 0, n_t - 1)]
+            return jnp.where(is_task, vm, -1)            # [n_p]
+
+        src_vm = ep_vm(c.pkt_src_task)
+        dst_vm = ep_vm(c.pkt_dst_task)
+        p_active = s.pkt_state == ACTIVE
+        cost_p = jnp.where(
+            p_active, c.pair_hops[jnp.maximum(s.pkt_pair, 0)], 0
+        ).astype(jnp.float32)
+        cost = (jnp.sum(jnp.where(src_vm[:, None] == viota[None, :],
+                                  cost_p[:, None], 0.0), axis=0)
+                + jnp.sum(jnp.where(dst_vm[:, None] == viota[None, :],
+                                    cost_p[:, None], 0.0), axis=0))
+        elig = ((viota < c.n_vms) & (cost > c.mig_threshold)
+                & (t >= s.vm_mig_until + c.mig_cooldown)
+                & (jnp.sum(s.vm_migrations) < c.mig_limit))
+        any_elig = jnp.any(elig)
+        v = jnp.argmax(jnp.where(elig, cost, -1.0)).astype(jnp.int32)
+
+        # estimated cost of v's active flows per candidate home: move v's
+        # endpoint to host h (hosts ARE nodes [0, n_hosts)), keep the
+        # other end, read the candidate-0 hop count
+        src_node, dst_node = _pkt_endpoints(c, meta, s)
+        mine_s = p_active & (src_vm == v)
+        mine_d = p_active & (dst_vm == v)
+        mine = mine_s | mine_d
+        n_h = c.host_fail_t.shape[0]
+        hiota = jnp.arange(n_h, dtype=jnp.int32)
+        new_src = jnp.where(mine_s[None, :], hiota[:, None],
+                            src_node[None, :])
+        new_dst = jnp.where(mine_d[None, :], hiota[:, None],
+                            dst_node[None, :])
+        est_pair = jnp.clip(new_src * meta.n_nodes + new_dst, 0,
+                            n_pairs - 1)
+        est = jnp.where(mine[None, :], c.pair_hops[est_pair], 0)
+        est_cost = jnp.sum(est.astype(jnp.float32), axis=1)  # [n_h]
+        host_live = hiota < c.n_hosts
+        if meta.has_failures:
+            host_live = host_live & ~s.host_dead
+        cur_host = jnp.clip(s.vm_host[jnp.minimum(v, n_vms - 1)], 0,
+                            n_h - 1)
+        h_best = jnp.argmin(jnp.where(host_live, est_cost, _INF)
+                            ).astype(jnp.int32)
+        do = (any_elig & (est_cost[h_best] < est_cost[cur_host])
+              & (h_best != cur_host))
+
+        vm_oh = (viota == v) & do
+        vm_host = jnp.where(vm_oh, h_best, s.vm_host)
+        vm_mig_until = jnp.where(vm_oh, t + c.mig_cost, s.vm_mig_until)
+        vm_migrations = s.vm_migrations + vm_oh.astype(jnp.int32)
+        ctrl_busy = jnp.where(
+            do, jnp.maximum(t, s.ctrl_busy) + 1.0 / c.ctrl_rate,
+            s.ctrl_busy)
+
+        # revert every routed packet touching v (active ones release their
+        # channels via the compacted drop scan — PR-4 machinery)
+        routed = (p_active | (s.pkt_state == INSTALLING)
+                  | ((s.pkt_state == WAITING) & (s.pkt_cand >= 0)))
+        hit_p = routed & ((src_vm == v) | (dst_vm == v)) & do
+        hit_drop = hit_p & p_active
+        links = _route_links(c, s, hit_drop)
+        pidx = jnp.arange(n_p, dtype=jnp.int32)
+        liota = jnp.arange(meta.n_links, dtype=jnp.int32)
+
+        def drop_one(k, carry):
+            nc, cursor = carry
+            i = jnp.min(jnp.where(hit_drop & (pidx > cursor), pidx, n_p))
+            links_k = links[jnp.minimum(i, n_p - 1)]
+            nc = nc - jnp.sum((links_k[:, None] == liota[None, :])
+                              .astype(jnp.int32), axis=0)
+            return nc, i
+
+        nc, _ = jax.lax.fori_loop(0, jnp.sum(hit_drop.astype(jnp.int32)),
+                                  drop_one, (nc0, jnp.int32(-1)))
+        s = s._replace(
+            vm_host=vm_host, vm_mig_until=vm_mig_until,
+            vm_migrations=vm_migrations, ctrl_busy=ctrl_busy,
+            pkt_state=jnp.where(hit_p, WAITING, s.pkt_state),
+            pkt_pair=jnp.where(hit_p, -1, s.pkt_pair),
+            pkt_cand=jnp.where(hit_p, -1, s.pkt_cand),
+            pkt_ready_t=jnp.where(hit_p, jnp.inf, s.pkt_ready_t),
+            pkt_reroutes=s.pkt_reroutes + hit_p.astype(jnp.int32))
+        return s, nc, do
+
+    enabled = ((pol["migration"] == MIG_CONGESTION)
+               & jnp.isfinite(c.mig_threshold))
+    s, nc, migrated = jax.lax.cond(
+        enabled, attempt, lambda args: (args[0], args[1],
+                                        jnp.asarray(False)),
+        (s, cache["nc"]))
+    return s, {**cache, "nc": nc}, migrated
+
+
 def _rates(c: EngineConsts, meta, pol, s: SimState, links, p_active,
            nc, link_bw):
     """Piecewise-constant packet/task rates from the fused network tensors
@@ -869,9 +1398,14 @@ def _rates(c: EngineConsts, meta, pol, s: SimState, links, p_active,
         # belt-and-braces: a task stranded on a dead host executes nothing
         # (can only happen when EVERY host was dead at placement time)
         task_rate = jnp.where(
-            s.host_dead[jnp.clip(c.vm_host[vm], 0,
+            s.host_dead[jnp.clip(_vm_host(c, meta, s)[vm], 0,
                                  c.host_fail_t.shape[0] - 1)],
             0.0, task_rate)
+    if meta.has_ctrl:
+        # live migration (DESIGN.md §10): the VM keeps its tasks but
+        # executes nothing until the re-homing completes; vm_mig_until is
+        # a dt breakpoint, so the pause ends exactly on time
+        task_rate = jnp.where(s.vm_mig_until[vm] > s.time, 0.0, task_rate)
     return pkt_rate, task_rate, t_active
 
 
@@ -901,7 +1435,12 @@ def _step(c: EngineConsts, meta, pol, aux, carry):
     s, cache = carry
     if meta.has_failures:
         s, cache = _apply_failures(c, meta, pol, s, cache)
-    s, placed = _admit_and_place(c, meta, pol, aux, s)
+    s, placed, admit_now = _admit_and_place(c, meta, pol, aux, s)
+    if meta.has_ctrl:
+        # migrate BEFORE the cache refresh so re-homed endpoints resolve
+        # against the new placement this very step (DESIGN.md §10)
+        s, cache, migrated = _maybe_migrate(c, meta, pol, s, cache)
+        placed = placed | migrated
     # placement changed -> the packet endpoint/pair cache is stale
     cache = jax.lax.cond(
         placed, lambda: {**cache, **_endpoint_cache(c, meta, s)},
@@ -909,7 +1448,21 @@ def _step(c: EngineConsts, meta, pol, aux, carry):
     # the fused network pass: route links, active mask, channel counts and
     # effective bandwidth come out of activation ONCE per step and feed
     # rates + energy below (DESIGN.md §8)
-    s, links, p_active, nc, link_bw = _activate(c, meta, pol, aux, cache, s)
+    if meta.has_ctrl:
+        install_static = static_policy_value(pol["install_mode"])
+        if install_static is None or install_static == INSTALL_PROACTIVE:
+            s = jax.lax.cond(
+                (jnp.any(admit_now)
+                 & (pol["install_mode"] == INSTALL_PROACTIVE)
+                 & (pol["routing"] == ROUTE_SDN)),
+                lambda s: _preinstall(c, meta, pol, aux, cache, s,
+                                      admit_now),
+                lambda s: s, s)
+        s, links, p_active, nc, link_bw = _activate_ctrl(c, meta, pol, aux,
+                                                         cache, s)
+    else:
+        s, links, p_active, nc, link_bw = _activate(c, meta, pol, aux,
+                                                    cache, s)
     pkt_rate, task_rate, t_active = _rates(c, meta, pol, s, links, p_active,
                                            nc, link_bw)
 
@@ -929,12 +1482,22 @@ def _step(c: EngineConsts, meta, pol, aux, carry):
         dt_f = jnp.min(jnp.where(c.fail_breaks > s.time,
                                  c.fail_breaks - s.time, _INF))
         dt = jnp.minimum(dt, dt_f)
+    if meta.has_ctrl:
+        # rule-install completions and migration resumes are rate
+        # breakpoints exactly like failures (DESIGN.md §10): the analytic
+        # min lands the clock exactly on each wake instant
+        dt_c = jnp.min(jnp.where((s.pkt_state == INSTALLING)
+                                 & (s.pkt_ready_t > s.time),
+                                 s.pkt_ready_t - s.time, _INF))
+        dt_m = jnp.min(jnp.where(s.vm_mig_until > s.time,
+                                 s.vm_mig_until - s.time, _INF))
+        dt = jnp.minimum(dt, jnp.minimum(dt_c, dt_m))
     stalled = jnp.isinf(dt)
     dt = jnp.where(stalled, 0.0, dt)
 
     # energy (power is constant over [t, t+dt))
     vm_safe = jnp.maximum(s.task_vm, 0)
-    host_of_task = c.vm_host[vm_safe]
+    host_of_task = _vm_host(c, meta, s)[vm_safe]
     # MIPS-by-host via a compacted per-active-task accumulation, not a
     # task-axis scatter-add: the scatter runs EVERY step, and under a
     # vmapped cohort an XLA/CPU scatter serializes one row per lane
@@ -1096,7 +1659,8 @@ def make_packed_simulator(meta):
     def run(consts: EngineConsts, pol: Dict[str, jnp.ndarray],
             s0: SimState | None = None) -> SimState:
         if s0 is None:
-            s0 = init_state_from_consts(consts, meta.n_switches)
+            s0 = init_state_from_consts(consts, meta.n_switches,
+                                        meta.ctrl_slots)
         aux = _make_aux(consts, pol)
         # nothing is active at t=0, so the carried channel counts start 0
         cache0 = {**_endpoint_cache(consts, meta, s0),
@@ -1150,7 +1714,7 @@ def init_fleet_carry(consts: EngineConsts, meta, width: int):
     ``(SimState, step-cache, done)`` with every leaf gaining a leading lane
     axis.  Lanes start identical — policies differ, states don't."""
     meta = SimMeta.coerce(meta)
-    s0 = init_state_from_consts(consts, meta.n_switches)
+    s0 = init_state_from_consts(consts, meta.n_switches, meta.ctrl_slots)
     cache0 = {**_endpoint_cache(consts, meta, s0),
               "nc": jnp.zeros(meta.n_links, jnp.int32)}
     done0 = _finished(consts, meta, s0)

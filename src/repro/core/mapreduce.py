@@ -18,6 +18,7 @@ from typing import List, Sequence
 
 import numpy as np
 
+from .ctrlplane import CtrlPlaneConfig
 from .energy import EnergyParams
 from .failures import FailureSchedule
 from .routing import RouteTable, build_route_table
@@ -25,8 +26,9 @@ from .topology import Topology
 
 GBIT = 1e9
 
-# packet / task states
-WAITING, ACTIVE, DONE, VOID = 0, 1, 2, 3
+# packet / task states.  INSTALLING (packets only, DESIGN.md §10): routed,
+# waiting for its flow rules to finish installing at the controller.
+WAITING, ACTIVE, DONE, VOID, INSTALLING = 0, 1, 2, 3, 4
 KIND_MAP, KIND_REDUCE = 0, 1
 PHASE_IN, PHASE_SHUFFLE, PHASE_OUT = 0, 1, 2
 
@@ -94,6 +96,9 @@ class SimSetup:
     # optional deterministic outage windows (DESIGN.md §7); None = the
     # all-inf no-failure schedule
     failures: FailureSchedule | None = None
+    # optional control-plane resource model (DESIGN.md §10); None = the
+    # identity instant-controller config
+    ctrl: CtrlPlaneConfig | None = None
 
     @property
     def n_jobs(self) -> int:
@@ -111,7 +116,8 @@ class SimSetup:
 def build_setup(jobs: Sequence[JobSpec], cluster: ClusterSpec,
                 route_table: RouteTable | None = None,
                 k_max: int = 16, split: int = 1,
-                failures: FailureSchedule | None = None) -> SimSetup:
+                failures: FailureSchedule | None = None,
+                ctrl: CtrlPlaneConfig | None = None) -> SimSetup:
     """``split`` = network packets per logical transfer (paper: workloads
     specify "the size of network packets" in the CSV; a data block is sent as
     multiple packet objects, EACH routed by the controller — "two packets
@@ -178,10 +184,13 @@ def build_setup(jobs: Sequence[JobSpec], cluster: ClusterSpec,
     n_p = len(p_job)
     if failures is not None:
         failures.validate(cluster.topo.n_hosts, cluster.topo.n_links)
+    if ctrl is not None:
+        ctrl.validate()
     return SimSetup(
         cluster=cluster,
         route_table=rt,
         failures=failures,
+        ctrl=ctrl,
         jobs=tuple(jobs),
         job_release=np.asarray([j.submit_time for j in jobs], np.float32),
         job_total_mi=np.asarray([j.total_mi for j in jobs], np.float32),

@@ -43,6 +43,16 @@ JOBSEL_PRIORITY = 2    # user-supplied priority value
 RECOVERY_RESTART = 0   # YARN re-execution: lost task progress is redone
 RECOVERY_RESUME = 1    # beyond-paper checkpointing: progress survives
 
+# flow-rule installation mode (DESIGN.md §10); only meaningful when a
+# control-plane config is active (SimMeta.has_ctrl)
+INSTALL_REACTIVE = 0   # packet-in: rules install when a packet activates
+INSTALL_PROACTIVE = 1  # pre-install a job's rules at admission (overlapped)
+
+# dynamic VM placement under the controller (DESIGN.md §10, S-CORE)
+MIG_STATIC = 0         # VMs stay where the cluster spec put them
+MIG_CONGESTION = 1     # re-home a VM when its aggregate link cost exceeds
+                       # CtrlPlaneConfig.mig_threshold
+
 
 @dataclasses.dataclass(frozen=True)
 class PolicyField:
@@ -191,6 +201,16 @@ register_policy_field(
     choices={"restart": RECOVERY_RESTART, "resume": RECOVERY_RESUME},
     doc="host-failure recovery: YARN re-execution vs checkpoint resume "
         "(DESIGN.md §7)")
+register_policy_field(
+    "install_mode", INSTALL_REACTIVE,
+    choices={"reactive": INSTALL_REACTIVE, "proactive": INSTALL_PROACTIVE},
+    doc="flow-rule installation: packet-in reactive vs pre-install at job "
+        "admission (DESIGN.md §10; inert unless SimMeta.has_ctrl)")
+register_policy_field(
+    "migration", MIG_STATIC,
+    choices={"static": MIG_STATIC, "congestion": MIG_CONGESTION},
+    doc="dynamic VM placement: migrate-on-congestion re-homing "
+        "(DESIGN.md §10; inert unless SimMeta.has_ctrl)")
 register_policy_field(
     "seed", 0,
     doc="per-replica hash seed (random placement / legacy route pins)")

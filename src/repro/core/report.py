@@ -65,6 +65,11 @@ def job_report_arrays(pkt_job, pkt_phase, task_job, task_kind, job_release,
     reroute = jnp.zeros((n_j,), jnp.int32).at[jnp.maximum(pkt_job, 0)].add(
         jnp.where(pkt_job >= 0, s.pkt_reroutes, 0))
 
+    # control-plane metrics (DESIGN.md §10): time packets spent parked in
+    # INSTALLING waiting for flow-rule installs; 0 without a ctrl config
+    install_wait = jnp.zeros((n_j,)).at[jnp.maximum(pkt_job, 0)].add(
+        jnp.where(pkt_job >= 0, s.pkt_install_wait, 0.0))
+
     return {
         "transmission_time": j_tr,
         "t_storage_to_map": t1,
@@ -79,6 +84,7 @@ def job_report_arrays(pkt_job, pkt_phase, task_job, task_kind, job_release,
         "task_reexecs": reexec,
         "pkt_reroutes": reroute,
         "downtime_s": s.job_downtime,
+        "install_wait_s": install_wait,
     }
 
 

@@ -41,6 +41,14 @@ class SimMeta:
     # traces EXACTLY the pre-failure program, so a no-failure run is
     # bit-identical to the engine without this subsystem.
     has_failures: bool = False
+    # True iff some replica's control-plane config is non-identity
+    # (DESIGN.md §10) — the same trace-time contract as ``has_failures``:
+    # False traces EXACTLY the pre-control-plane program.
+    has_ctrl: bool = False
+    # static per-switch flow-table width (padded max in a packed sweep);
+    # 0 when the control plane is off or uncached — the flow-table state
+    # tensors then have a zero-length slot axis and are inert.
+    ctrl_slots: int = 0
 
     @classmethod
     def coerce(cls, meta: "SimMeta" | Mapping[str, Any]) -> "SimMeta":

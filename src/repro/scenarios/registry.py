@@ -16,6 +16,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from ..core.ctrlplane import CtrlPlaneConfig
 from ..core.energy import EnergyParams
 from ..core.failures import FailureSchedule
 from ..core.mapreduce import ClusterSpec, JobSpec, SimSetup, build_setup
@@ -60,13 +61,17 @@ class Scenario:
     # optional seeded outage trace (DESIGN.md §7), built against the
     # realized topology
     failures: Optional[Callable[[Topology], FailureSchedule]] = None
+    # optional control-plane resource model (DESIGN.md §10); None = the
+    # identity instant controller
+    ctrl: Optional[CtrlPlaneConfig] = None
 
     def build(self) -> SimSetup:
         topo = self.topology()
         return build_setup(list(self.workload()), make_cluster(
             topo, vms_per_host=self.vms_per_host),
             k_max=self.k_max, split=self.split,
-            failures=self.failures(topo) if self.failures else None)
+            failures=self.failures(topo) if self.failures else None,
+            ctrl=self.ctrl)
 
 
 _REGISTRY: Dict[str, Callable[..., Scenario]] = {}
@@ -202,6 +207,53 @@ def _leaf_spine_xl(n_spine: int = 8, n_leaf: int = 16, hosts_per_leaf: int = 8,
         description="128-host leaf-spine Clos, 128-job Zipf mix "
                     "(engine_profile scaling tier)",
         k_max=k_max,
+    )
+
+
+@register("paper-fabric-ctrl")
+def _paper_fabric_ctrl(seed: int = 0, n_each: int = 1, split: int = 2,
+                       k_max: int = 16, install_latency: float = 0.05,
+                       ctrl_rate: float = 500.0,
+                       table_slots: int = 8) -> Scenario:
+    """The paper fabric with the control plane as a REAL resource
+    (DESIGN.md §10): finite rule-install latency, a rate-limited
+    controller and LRU-bounded per-switch flow tables.  The honest
+    counterpart of ``paper-fabric``'s instant-oracle controller — here
+    legacy routing (which needs no flow-mod round trip) can beat SDN
+    (``benchmarks/ctrl_sweep.py``)."""
+    return Scenario(
+        name="paper-fabric-ctrl",
+        topology=paper_fat_tree,
+        workload=lambda: paper_jobs(seed=seed, n_each=n_each),
+        description="paper §5 fabric + rate-limited controller with "
+                    "flow-rule install latency",
+        split=split,
+        k_max=k_max,
+        ctrl=CtrlPlaneConfig(install_latency=install_latency,
+                             ctrl_rate=ctrl_rate, table_slots=table_slots),
+    )
+
+
+@register("leaf-spine-ctrl")
+def _leaf_spine_ctrl(n_spine: int = 4, n_leaf: int = 4,
+                     hosts_per_leaf: int = 4, seed: int = 0, n_jobs: int = 6,
+                     install_latency: float = 0.02, ctrl_rate: float = 1000.0,
+                     table_slots: int = 8, mig_threshold: float = 12.0,
+                     mig_cost: float = 0.5, mig_cooldown: float = 5.0
+                     ) -> Scenario:
+    """Leaf-spine Clos under a finite controller WITH migrate-on-congestion
+    armed (DESIGN.md §10): a finite ``mig_threshold`` lets the
+    ``migration=congestion`` policy re-home hot VMs (the S-CORE
+    comparison); under ``migration=static`` the threshold is inert."""
+    return Scenario(
+        name=f"leaf-spine-ctrl-{n_spine}x{n_leaf}",
+        topology=lambda: leaf_spine(n_spine, n_leaf, hosts_per_leaf),
+        workload=lambda: zipf_workload(n_jobs=n_jobs, seed=seed),
+        description="leaf-spine Clos + finite controller, migration armed",
+        ctrl=CtrlPlaneConfig(install_latency=install_latency,
+                             ctrl_rate=ctrl_rate, table_slots=table_slots,
+                             mig_threshold=mig_threshold, mig_cost=mig_cost,
+                             mig_cooldown=mig_cooldown),
     )
 
 

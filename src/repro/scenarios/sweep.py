@@ -35,9 +35,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.engine import (EngineConsts, NODE_OFFSET, default_max_steps,
-                           job_n_tasks_np, job_valid_mask,
-                           task_rank_in_job_np)
+from ..core.engine import (EngineConsts, NODE_OFFSET, UNREACHABLE_HOPS,
+                           default_max_steps, job_n_tasks_np,
+                           job_valid_mask, task_rank_in_job_np)
+from ..core.ctrlplane import no_ctrl
 from ..core.failures import no_failures
 from ..core.mapreduce import SimSetup
 from ..core.policies import as_policy_arrays, policy_field_names
@@ -56,6 +57,7 @@ def _pack_one(setup: SimSetup, dims: Dict[str, int]) -> Dict[str, np.ndarray]:
     topo = setup.cluster.topo
     rt = setup.route_table
     sched = setup.failures or no_failures(topo.n_hosts, topo.n_links)
+    cfg = setup.ctrl or no_ctrl()
     H, SW = dims["n_hosts"], dims["n_switches"]
     Nn, L, K, HP = dims["n_nodes"], dims["n_links"], dims["k_max"], dims["max_hops"]
     n_h, n_sw = topo.n_hosts, topo.n_switches
@@ -82,6 +84,13 @@ def _pack_one(setup: SimSetup, dims: Dict[str, int]) -> Dict[str, np.ndarray]:
     routes[new_pair, : rt.k_max, : rt.max_hops] = rt.routes
     n_cand = np.zeros((Nn * Nn,), np.int32)
     n_cand[new_pair] = rt.n_cand
+    # candidate-0 hop counts at the padded pair layout (DESIGN.md §10):
+    # pad pairs are unreachable, the padded diagonal stays 0
+    pair_hops = np.full((Nn * Nn,), UNREACHABLE_HOPS, np.int32)
+    pair_hops[new_pair] = np.where(rt.n_cand > 0, rt.route_len[:, 0],
+                                   UNREACHABLE_HOPS).astype(np.int32)
+    diag = np.arange(Nn, dtype=np.int64)
+    pair_hops[diag * Nn + diag] = 0
 
     # failure schedule (DESIGN.md §7): pad hosts/links never fail; the
     # concatenated breakpoint tensor (DESIGN.md §8) is rebuilt from the
@@ -162,6 +171,16 @@ def _pack_one(setup: SimSetup, dims: Dict[str, int]) -> Dict[str, np.ndarray]:
         "fail_breaks": np.concatenate([
             sched_pad["host_fail_t"], sched_pad["host_recover_t"],
             sched_pad["link_fail_t"], sched_pad["link_recover_t"]]),
+        # control plane (DESIGN.md §10): identity scalars when the replica
+        # carries no config — its lanes behave like the oracle controller
+        "ctrl_on": np.bool_(cfg.any_ctrl),
+        "ctrl_latency": np.float32(cfg.install_latency),
+        "ctrl_rate": np.float32(cfg.ctrl_rate),
+        "mig_threshold": np.float32(cfg.mig_threshold),
+        "mig_cost": np.float32(cfg.mig_cost),
+        "mig_cooldown": np.float32(cfg.mig_cooldown),
+        "mig_limit": np.int32(cfg.mig_limit),
+        "pair_hops": pair_hops,
     }
 
 
@@ -204,6 +223,11 @@ def pack_setups(setups: Sequence[SimSetup]
         max_steps=max(default_max_steps(s) for s in setups),
         has_failures=any(s.failures is not None and s.failures.any_failures
                          for s in setups),
+        has_ctrl=any(s.ctrl is not None and s.ctrl.any_ctrl
+                     for s in setups),
+        ctrl_slots=max((s.ctrl.table_slots for s in setups
+                        if s.ctrl is not None and s.ctrl.any_ctrl),
+                       default=0),
     )
     return consts, meta
 

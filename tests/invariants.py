@@ -1,0 +1,162 @@
+"""Reusable engine invariants (DESIGN.md §4, §7, §10).
+
+Factored out of the ad-hoc per-test assertions in test_failures.py /
+test_engine_equiv.py so every suite — and especially the registry x policy
+grid in test_invariants.py — checks the SAME properties.  Each checker
+takes numpy views of one UNBATCHED replica (consts leaves ``[...]``, final
+``SimState`` leaves ``[...]``) plus its ``SimMeta`` and raises
+``AssertionError`` with a labelled message on violation.
+
+The invariants:
+
+- ``check_terminal``     — a non-stalled run finishes everything: every
+  valid task/packet DONE, every valid job's outputs accounted, vm_load
+  drained to zero.
+- ``check_clock``        — the clock is monotone and finite: time >= 0,
+  finish >= start for completed work, release <= admit <= done per job.
+- ``check_pad_inert``    — pad slots of a packed sweep never leave VOID /
+  never acquire a VM, a route, or a timestamp (DESIGN.md §5).
+- ``check_energy``       — energy accumulators are non-negative and busy
+  time never exceeds the makespan.
+- ``check_ctrl``         — control-plane accounting (DESIGN.md §10):
+  ``occupied == installs - evictions`` exactly (flow-table conservation),
+  counters non-negative, nothing left parked INSTALLING at the end, and
+  with the ctrl plane off every ctrl counter is zero and placement never
+  moved.
+"""
+import numpy as np
+
+from repro.core.mapreduce import DONE, INSTALLING, VOID
+
+_TOL = 1e-4
+
+
+def _np(tree_leaf):
+    return np.asarray(tree_leaf)
+
+
+def check_terminal(c, meta, s, label=""):
+    stalled = bool(_np(s.stalled))
+    assert not stalled, f"{label}: run stalled at t={float(_np(s.time))}"
+    task_valid = _np(c.task_valid)
+    pkt_valid = _np(c.pkt_valid)
+    job_valid = _np(c.job_valid)
+    assert np.all(_np(s.task_state)[task_valid] == DONE), \
+        f"{label}: valid tasks not DONE"
+    assert np.all(_np(s.pkt_state)[pkt_valid] == DONE), \
+        f"{label}: valid packets not DONE"
+    assert np.all(_np(s.job_out_done)[job_valid]
+                  >= _np(c.job_n_out)[job_valid]), \
+        f"{label}: valid jobs missing output packets"
+    assert np.all(_np(s.vm_load) == 0), \
+        f"{label}: vm_load not drained (residual={_np(s.vm_load).max()})"
+
+
+def check_clock(c, meta, s, label=""):
+    t = float(_np(s.time))
+    assert np.isfinite(t) and t >= 0.0, f"{label}: bad makespan {t}"
+    pkt_done = _np(s.pkt_state) == DONE
+    task_done = _np(s.task_state) == DONE
+    pdur = (_np(s.pkt_finish) - _np(s.pkt_start))[pkt_done]
+    tdur = (_np(s.task_finish) - _np(s.task_start))[task_done]
+    assert np.all(pdur >= -_TOL), f"{label}: packet finish < start"
+    assert np.all(tdur >= -_TOL), f"{label}: task finish < start"
+    assert np.all(_np(s.pkt_finish)[pkt_done] <= t + _TOL), \
+        f"{label}: packet finished after the clock"
+    job_valid = _np(c.job_valid)
+    admit = _np(s.job_admit_t)[job_valid]
+    done = _np(s.job_done_t)[job_valid]
+    release = _np(c.job_release)[job_valid]
+    fin = np.isfinite(admit)
+    assert np.all(admit[fin] >= release[fin] - _TOL), \
+        f"{label}: job admitted before release"
+    both = fin & np.isfinite(done)
+    assert np.all(done[both] >= admit[both] - _TOL), \
+        f"{label}: job done before admission"
+
+
+def check_pad_inert(c, meta, s, label=""):
+    pad_t = ~_np(c.task_valid)
+    pad_p = ~_np(c.pkt_valid)
+    assert np.all(_np(s.task_state)[pad_t] == VOID), \
+        f"{label}: pad task left VOID"
+    assert np.all(_np(s.pkt_state)[pad_p] == VOID), \
+        f"{label}: pad packet left VOID"
+    assert np.all(_np(s.task_vm)[pad_t] == -1), \
+        f"{label}: pad task acquired a VM"
+    assert np.all(_np(s.pkt_pair)[pad_p] == -1), \
+        f"{label}: pad packet acquired a route"
+    assert np.all(np.isnan(_np(s.task_start)[pad_t])), \
+        f"{label}: pad task has a start time"
+    assert np.all(np.isnan(_np(s.pkt_finish)[pad_p])), \
+        f"{label}: pad packet has a finish time"
+
+
+def check_energy(c, meta, s, label=""):
+    t = float(_np(s.time))
+    assert np.all(_np(s.host_energy) >= 0), f"{label}: negative host energy"
+    assert np.all(_np(s.switch_energy) >= 0), \
+        f"{label}: negative switch energy"
+    assert np.all(_np(s.host_busy) <= t * (1 + 1e-5) + _TOL), \
+        f"{label}: host busy time exceeds makespan"
+
+
+def check_ctrl(c, meta, s, label=""):
+    installs = int(_np(s.ctrl_installs))
+    evictions = int(_np(s.ctrl_evictions))
+    reinstalls = int(_np(s.ctrl_reinstalls))
+    qwait = float(_np(s.ctrl_queue_wait))
+    migs = int(_np(s.vm_migrations).sum())
+    if not meta.has_ctrl:
+        assert installs == evictions == reinstalls == 0 and migs == 0, \
+            f"{label}: ctrl counters nonzero with the control plane off"
+        assert qwait == 0.0, f"{label}: queue wait nonzero with ctrl off"
+        assert np.array_equal(_np(s.vm_host), _np(c.vm_host)), \
+            f"{label}: placement moved with the control plane off"
+        return
+    assert installs >= 0 and evictions >= 0 and reinstalls >= 0, \
+        f"{label}: negative ctrl counter"
+    assert qwait >= 0.0, f"{label}: negative controller queue wait"
+    assert reinstalls <= installs, f"{label}: reinstalls exceed installs"
+    # flow-table conservation: every install either still occupies a slot
+    # or was evicted — exact, for every (latency, rate, slots) config
+    occupied = int((_np(s.ftab_pair) >= 0).sum())
+    assert occupied == installs - evictions, \
+        f"{label}: table conservation broken " \
+        f"(occupied={occupied}, installs={installs}, evictions={evictions})"
+    # nothing may end the run parked on the controller
+    pkt_valid = _np(c.pkt_valid)
+    assert not np.any(_np(s.pkt_state)[pkt_valid] == INSTALLING), \
+        f"{label}: packet left INSTALLING at the end"
+    assert np.all(_np(s.pkt_install_wait) >= 0), \
+        f"{label}: negative install wait"
+    # live placement stays on real hosts
+    n_real_vms = int(_np(c.n_vms))
+    vm_host = _np(s.vm_host)[:n_real_vms]
+    assert np.all((vm_host >= 0) & (vm_host < int(_np(c.n_hosts)))), \
+        f"{label}: migrated VM left the host range"
+
+
+ALL_INVARIANTS = (check_terminal, check_clock, check_pad_inert,
+                  check_energy, check_ctrl)
+
+
+def check_all(c, meta, s, label="", expect_stalled=False):
+    """Run every invariant on one unbatched replica's final state."""
+    for fn in ALL_INVARIANTS:
+        if expect_stalled and fn in (check_terminal,):
+            continue
+        fn(c, meta, s, label=label)
+
+
+def grid_check_all(consts, meta, states, scenario_names, policy_names):
+    """Apply ``check_all`` to every cell of an ``[S, P]`` result grid.
+
+    ``consts`` leaves are ``[S, ...]``, ``states`` leaves ``[S, P, ...]`` —
+    the ``repro.api.Results`` layout."""
+    import jax
+    for si, sn in enumerate(scenario_names):
+        ci = jax.tree_util.tree_map(lambda a: a[si], consts)
+        for pi, pn in enumerate(policy_names):
+            cell = jax.tree_util.tree_map(lambda a: a[si, pi], states)
+            check_all(ci, meta, cell, label=f"{sn}/{pn}")

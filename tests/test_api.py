@@ -10,36 +10,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import assert_states_equal as assert_states_identical
+from conftest import tiny_setups as _tiny_setups
 from repro.api import (Experiment, PolicyConfig, SimMeta, as_policy_arrays,
                        policy_field_names, runners)
 from repro.core import (PLACE_RANDOM, ROUTE_LEGACY, ROUTE_SDN, paper_setup,
                         simulate, simulate_batch, simulate_scenarios)
 from repro.core import policies as policy_mod
 from repro.core.engine import make_consts
-from repro.core.mapreduce import build_setup
-from repro.core.topology import canonical_tree, leaf_spine
-from repro.scenarios import (make_cluster, pack_setups, policy_arrays,
-                             sweep_grid, uniform_workload, zipf_workload)
-
-
-def _tiny_setups():
-    ls = build_setup(uniform_workload(n_jobs=2, seed=0),
-                     make_cluster(leaf_spine(2, 2, 2)), k_max=4)
-    ct = build_setup(zipf_workload(n_jobs=3, seed=1),
-                     make_cluster(canonical_tree(2, 2, 2)), k_max=4)
-    return [("leaf-spine", ls), ("canon-tree", ct)]
-
-
-def assert_states_identical(a, b, context=""):
-    """Leaf-by-leaf bit equality (NaN == NaN) between two SimStates."""
-    for name, la, lb in zip(a._fields, a, b):
-        la, lb = np.asarray(la), np.asarray(lb)
-        assert la.shape == lb.shape, f"{context}{name}: shape {la.shape} != {lb.shape}"
-        if np.issubdtype(la.dtype, np.floating):
-            ok = np.array_equal(la, lb, equal_nan=True)
-        else:
-            ok = np.array_equal(la, lb)
-        assert ok, f"{context}{name}: values differ"
+from repro.scenarios import pack_setups, policy_arrays, sweep_grid
 
 
 # ---------------------------------------------------------------------------

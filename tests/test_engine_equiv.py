@@ -13,6 +13,7 @@ x 3 seeds, and asserts every ``SimState`` field is bitwise equal
 (NaN == NaN) — the vectorized kernel must preserve the sequential
 tie-break order exactly.
 """
+import dataclasses
 import itertools
 
 import jax
@@ -20,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import assert_states_equal
 from repro.core import fairshare
 from repro.core.engine import (NODE_OFFSET, init_state_from_consts,
                                make_consts)
@@ -424,6 +426,13 @@ FAILURE_SCENARIOS = [
     ("paper-fabric-failures", dict(split=1)),
     ("leaf-spine-failures", dict(n_jobs=4)),
 ]
+# ctrl scenarios enter the bit-identity suite with their CtrlPlaneConfig
+# STRIPPED: has_ctrl=False must trace the exact pre-control-plane program
+# (DESIGN.md §10) — the on-behavior is covered by tests/test_ctrlplane.py
+CTRL_SCENARIOS = [
+    ("paper-fabric-ctrl", dict(split=1)),
+    ("leaf-spine-ctrl", dict(n_jobs=4)),
+]
 
 
 def policy_grid(seeds=(0, 1, 2)):
@@ -445,18 +454,10 @@ def policy_grid(seeds=(0, 1, 2)):
     return pols
 
 
-def assert_states_equal(ref, new, label):
-    for name in ref._fields:
-        a = np.asarray(getattr(ref, name))
-        b = np.asarray(getattr(new, name))
-        assert np.array_equal(a, b, equal_nan=True), \
-            f"{label}: SimState.{name} differs " \
-            f"(max |delta| where comparable: " \
-            f"{np.nanmax(np.abs(a.astype(np.float64) - b.astype(np.float64)))})"
-
-
-def _run_grid(scenarios):
+def _run_grid(scenarios, strip_ctrl=False):
     setups = [get_scenario(name, **kw).build() for name, kw in scenarios]
+    if strip_ctrl:
+        setups = [dataclasses.replace(s, ctrl=None) for s in setups]
     consts, meta = pack_setups(setups)
     pols = {k: jnp.asarray(v) for k, v in policy_arrays(policy_grid()).items()}
 
@@ -471,7 +472,8 @@ def _run_grid(scenarios):
 
 def test_all_scenarios_registered():
     """The grids below must cover every registered scenario."""
-    covered = {n for n, _ in NO_FAILURE_SCENARIOS + FAILURE_SCENARIOS}
+    covered = {n for n, _ in
+               NO_FAILURE_SCENARIOS + FAILURE_SCENARIOS + CTRL_SCENARIOS}
     assert covered == set(list_scenarios())
 
 
@@ -485,6 +487,20 @@ def test_grid_bit_identity_no_failures():
 
 def test_grid_bit_identity_with_failures():
     ref_states, new_states, names = _run_grid(FAILURE_SCENARIOS)
+    for si, name in enumerate(names):
+        ref = jax.tree_util.tree_map(lambda a: a[si], ref_states)
+        new = jax.tree_util.tree_map(lambda a: a[si], new_states)
+        assert_states_equal(ref, new, name)
+
+
+def test_grid_bit_identity_ctrl_stripped():
+    """The §10 off switch: the ctrl scenarios with their CtrlPlaneConfig
+    removed must be BITWISE the pre-control-plane engine across the whole
+    policy x seed grid — every control-plane path sits behind trace-time
+    ``meta.has_ctrl`` branches, so has_ctrl=False is the identical
+    program, not a dynamically-disabled one."""
+    ref_states, new_states, names = _run_grid(CTRL_SCENARIOS,
+                                              strip_ctrl=True)
     for si, name in enumerate(names):
         ref = jax.tree_util.tree_map(lambda a: a[si], ref_states)
         new = jax.tree_util.tree_map(lambda a: a[si], new_states)

@@ -1,34 +1,19 @@
 """Failure & recovery subsystem (DESIGN.md §7): §4 invariants under
-failures, no-failure bit-identity, SDN-reroute vs legacy-pin semantics."""
-import dataclasses
+failures, no-failure bit-identity, SDN-reroute vs legacy-pin semantics.
 
+``mini_setup`` / ``with_failures`` / ``dims`` live in conftest.py (shared
+with the invariant and control-plane suites)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import dims, with_failures
 from repro.core import (PolicyConfig, RECOVERY_RESUME, ROUTE_LEGACY,
                         ROUTE_SDN, host_crash, link_cut, no_failures,
-                        paper_cluster, paper_jobs, simulate, simulate_batch,
-                        summarize)
+                        simulate, simulate_batch, summarize)
 from repro.core.flows import Flow, flows_setup
-from repro.core.mapreduce import DONE, build_setup
+from repro.core.mapreduce import DONE
 from repro.core.topology import leaf_spine, torus_2d
-
-
-@pytest.fixture(scope="module")
-def mini_setup():
-    """3 paper jobs on the paper fabric — small enough for CPU tests."""
-    return build_setup(paper_jobs(seed=0, n_each=1), paper_cluster(),
-                       split=2)
-
-
-def with_failures(setup, sched):
-    return dataclasses.replace(setup, failures=sched)
-
-
-def dims(setup):
-    topo = setup.cluster.topo
-    return topo.n_hosts, topo.n_links
 
 
 def test_all_inf_schedule_bit_identical(mini_setup):

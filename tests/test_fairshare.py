@@ -1,5 +1,7 @@
-"""Fair-share bandwidth properties (hypothesis; skipped when the optional
-dev dependency is absent — see requirements-dev.txt)."""
+"""Fair-share bandwidth and control-plane properties (hypothesis; skipped
+when the optional dev dependency is absent — see requirements-dev.txt)."""
+import dataclasses
+
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -8,7 +10,11 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
+from repro.core import (CtrlPlaneConfig, INSTALL_PROACTIVE, INSTALL_REACTIVE,
+                        PolicyConfig, simulate)
 from repro.core.fairshare import eq3_rates, waterfill_rates
+from repro.core.flows import Flow, flows_setup
+from repro.core.topology import leaf_spine
 
 INTRA = 1e12
 
@@ -106,3 +112,65 @@ def test_capacity_invariant_both_policies_any_iter_cap(inst, n_iter):
                             jnp.asarray(bw), INTRA, n_iter=n_iter)):
         load = link_loads(routes, np.asarray(rates), bw.shape[0])
         assert np.all(load <= bw * (1 + 1e-3)), (load, bw)
+
+
+# ---------------------------------------------------------------------------
+# control-plane properties (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+# fixed topology + flow count: every draw reuses the same traced program
+# (ctrl scalars live in consts; only table_slots changes the trace)
+_CTRL_TOPO = leaf_spine(2, 2, 2)
+
+
+def _ctrl_run(flows, cfg, install_mode=None):
+    setup = flows_setup(_CTRL_TOPO, flows)
+    if cfg.any_ctrl:
+        setup = dataclasses.replace(setup, ctrl=cfg)
+    pol = PolicyConfig() if install_mode is None else \
+        PolicyConfig(install_mode=install_mode)
+    return simulate(setup, pol)
+
+
+@given(lat=st.floats(0.0, 0.6), rate=st.sampled_from([2.0, 10.0, 100.0]),
+       slots=st.sampled_from([0, 2]),
+       sizes=st.tuples(st.floats(1.0, 10.0), st.floats(1.0, 10.0)))
+@settings(max_examples=15, deadline=None)
+def test_controller_work_conservation(lat, rate, slots, sizes):
+    """Flow-table conservation: every installed rule either still occupies
+    a slot or was evicted — ``occupied == installs - evictions`` EXACTLY,
+    for any (latency, rate, slots) config, including the table-less
+    slots=0 degenerate."""
+    cfg = CtrlPlaneConfig(install_latency=lat, ctrl_rate=rate,
+                          table_slots=slots)
+    s = _ctrl_run([Flow(0, 2, sizes[0]), Flow(1, 3, sizes[1])], cfg)
+    assert not bool(s.stalled)
+    installs = int(s.ctrl_installs)
+    evictions = int(s.ctrl_evictions)
+    occupied = int((np.asarray(s.ftab_pair) >= 0).sum())
+    assert installs >= 0 and evictions >= 0
+    assert occupied == installs - evictions
+    if slots == 0:
+        assert installs == evictions      # nothing can be retained
+
+
+@given(lats=st.tuples(st.floats(0.0, 1.5), st.floats(0.0, 1.5)),
+       rate=st.sampled_from([5.0, 50.0]),
+       mode=st.sampled_from([INSTALL_REACTIVE, INSTALL_PROACTIVE]))
+@settings(max_examples=15, deadline=None)
+def test_install_latency_monotone(lats, rate, mode):
+    """A slower controller can only delay a single flow: its completion
+    time is non-decreasing in install latency under BOTH install modes
+    (proactive pre-pins the route but still waits out the install)."""
+    lo, hi = sorted(lats)
+    t_lo = float(_ctrl_run(
+        [Flow(0, 2, 8.0)], CtrlPlaneConfig(install_latency=lo,
+                                           ctrl_rate=rate, table_slots=2),
+        install_mode=mode).time)
+    t_hi = float(_ctrl_run(
+        [Flow(0, 2, 8.0)], CtrlPlaneConfig(install_latency=hi,
+                                           ctrl_rate=rate, table_slots=2),
+        install_mode=mode).time)
+    assert t_hi >= t_lo - 1e-4
+    # the latency is paid additively on an uncontended path
+    assert t_hi - t_lo == pytest.approx(hi - lo, abs=1e-3)

@@ -1,0 +1,93 @@
+"""The registry-wide invariant harness (DESIGN.md §4/§10): every
+registered scenario x a policy grid spanning every axis — including the
+new install_mode / migration control-plane axes — runs as ONE packed grid
+and every cell must satisfy every invariant in tests/invariants.py."""
+import jax
+import jax.numpy as jnp
+
+from invariants import ALL_INVARIANTS, check_all, grid_check_all
+from repro.api import runners
+from repro.core.policies import (INSTALL_PROACTIVE, MIG_CONGESTION,
+                                 PLACE_ROUND_ROBIN, PolicyConfig,
+                                 RECOVERY_RESUME, ROUTE_LEGACY, ROUTE_SDN,
+                                 TRAFFIC_WATERFILL)
+from repro.scenarios import get_scenario, list_scenarios
+from repro.scenarios.sweep import pack_setups, policy_arrays
+
+# every registered scenario at CPU-test size (structures intact: topology
+# family, workload shape, failure trace, ctrl config)
+SCENARIOS = [
+    ("paper-fabric", dict(split=1)),
+    ("fat-tree", dict(n_jobs=4)),
+    ("leaf-spine", dict(n_jobs=4)),
+    ("canonical-tree", dict(n_jobs=4)),
+    ("leaf-spine-xl", dict(n_spine=2, n_leaf=2, hosts_per_leaf=2, n_jobs=4,
+                           max_scale=1.5)),
+    ("paper-fabric-failures", dict(split=1)),
+    ("leaf-spine-failures", dict(n_jobs=4)),
+    ("paper-fabric-ctrl", dict(split=1)),
+    ("leaf-spine-ctrl", dict(n_jobs=4)),
+]
+
+# one policy per branch family, cycling the secondary axes — including
+# both §10 axes, so ctrl scenarios exercise proactive install and
+# congestion migration inside the same packed grid
+POLICIES = [
+    ("sdn", PolicyConfig(routing=ROUTE_SDN, job_concurrency=2)),
+    ("legacy", PolicyConfig(routing=ROUTE_LEGACY, job_concurrency=2,
+                            placement=PLACE_ROUND_ROBIN)),
+    ("sdn-pro", PolicyConfig(routing=ROUTE_SDN,
+                             install_mode=INSTALL_PROACTIVE,
+                             traffic=TRAFFIC_WATERFILL, seed=1)),
+    ("sdn-mig", PolicyConfig(routing=ROUTE_SDN, migration=MIG_CONGESTION,
+                             recovery=RECOVERY_RESUME, job_concurrency=2)),
+]
+
+
+def test_scenario_list_covers_registry():
+    """This harness must grow with the registry — a newly registered
+    scenario that is not invariant-checked fails here."""
+    covered = {name for name, _ in SCENARIOS}
+    assert covered == set(list_scenarios())
+
+
+def test_policy_grid_covers_ctrl_axes():
+    pols = [p for _, p in POLICIES]
+    assert any(p.install_mode == INSTALL_PROACTIVE for p in pols)
+    assert any(p.migration == MIG_CONGESTION for p in pols)
+    assert any(p.routing == ROUTE_LEGACY for p in pols)
+
+
+def test_registry_policy_grid_invariants():
+    """The whole registry x policy grid in one vmapped program; every
+    final state passes every invariant."""
+    setups = [get_scenario(name, **kw).build() for name, kw in SCENARIOS]
+    consts, meta = pack_setups(setups)
+    assert meta.has_ctrl and meta.has_failures   # both subsystems traced in
+    pols = {k: jnp.asarray(v) for k, v in
+            policy_arrays([p for _, p in POLICIES]).items()}
+    states = jax.block_until_ready(
+        runners.get_runner(meta, "grid")(consts, pols))
+    grid_check_all(consts, meta, states,
+                   [name for name, _ in SCENARIOS],
+                   [name for name, _ in POLICIES])
+
+
+def test_invariants_catch_violations():
+    """The harness itself must be falsifiable: a doctored final state
+    trips the matching checker."""
+    import numpy as np
+    import pytest
+    setup = get_scenario("leaf-spine", n_jobs=2).build()
+    from repro.core.engine import make_consts
+    from repro.core import simulate
+    c, meta = make_consts(setup)
+    s = simulate(setup, PolicyConfig(job_concurrency=2))
+    check_all(c, meta, s, label="healthy")
+    assert len(ALL_INVARIANTS) >= 5
+    bad = s._replace(vm_load=np.asarray(s.vm_load) + 1)
+    with pytest.raises(AssertionError, match="vm_load"):
+        check_all(c, meta, bad, label="doctored")
+    bad2 = s._replace(ctrl_installs=np.int32(3))
+    with pytest.raises(AssertionError):
+        check_all(c, meta, bad2, label="doctored-ctrl")

@@ -3,13 +3,13 @@ packed multi-topology sweep (single-run equivalence + smoke)."""
 import numpy as np
 import pytest
 
+from conftest import tiny_setups as _tiny_setups
 from repro.core import (PLACE_LEAST_USED, PLACE_RANDOM, PolicyConfig,
                         simulate)
-from repro.core.mapreduce import build_setup
 from repro.core.routing import build_route_table, hop_distances_np
 from repro.core.topology import GBPS, canonical_tree, fat_tree, leaf_spine
-from repro.scenarios import (get_scenario, list_scenarios, make_cluster,
-                             sweep_grid, uniform_workload, zipf_workload,
+from repro.scenarios import (get_scenario, list_scenarios, sweep_grid,
+                             uniform_workload, zipf_workload,
                              bursty_workload)
 
 # ---------------------------------------------------------------------------
@@ -135,12 +135,6 @@ def test_registry_contents_and_overrides():
 # ---------------------------------------------------------------------------
 
 
-def _tiny_setups():
-    ls = build_setup(uniform_workload(n_jobs=2, seed=0),
-                     make_cluster(leaf_spine(2, 2, 2)), k_max=4)
-    ct = build_setup(zipf_workload(n_jobs=3, seed=1),
-                     make_cluster(canonical_tree(2, 2, 2)), k_max=4)
-    return [("leaf-spine", ls), ("canon-tree", ct)]
 
 
 def test_packed_sweep_matches_single_runs():
