@@ -36,7 +36,7 @@ from repro.core import (CtrlPlaneConfig, INSTALL_PROACTIVE, PolicyConfig,
                         ROUTE_LEGACY, ROUTE_SDN)
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--latencies", nargs="+", type=float,
                     default=[0.005, 0.02, 0.05, 0.1],
@@ -50,7 +50,7 @@ def main():
                     "controller on")
     ap.add_argument("--concurrency", type=int, default=2)
     ap.add_argument("--json", metavar="PATH", default=None)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     t0 = time.time()
     ctrl = [(f"lat{lat:g}",

@@ -33,7 +33,7 @@ PLACEMENTS = (
 )
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenarios", nargs="+",
                     default=["paper-fabric", "fat-tree", "leaf-spine",
@@ -47,7 +47,7 @@ def main():
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write a machine-readable benchmark report "
                          "(wall times, steps/s, per-scenario rows)")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     t0 = time.time()
     scens = [(f"{name}/s{seed}" if args.seeds > 1 else name,

@@ -25,6 +25,7 @@ from ..core.simmeta import SimMeta
 from .experiment import (Experiment, consts_build_count, consts_cache_clear)
 from .fleet import CohortSchedule, FleetStats, StepPredictor, run_fleet
 from .results import Results
+from .stream import StreamResults, StreamStats, run_stream
 from . import runners
 from .runners import get_runner
 
@@ -34,5 +35,6 @@ __all__ = [
     "policy_field_names", "policy_fields", "register_policy_field",
     "runners", "get_runner",
     "run_fleet", "FleetStats", "StepPredictor", "CohortSchedule",
+    "run_stream", "StreamResults", "StreamStats",
     "consts_build_count", "consts_cache_clear",
 ]

@@ -289,6 +289,25 @@ class Experiment:
         from .fleet import run_fleet
         return run_fleet(self, width=width, chunk_steps=chunk_steps, **kw)
 
+    def run_stream(self, arrivals, horizon: float, *, warmup: float = 0.0,
+                   window: Optional[float] = None, slots: int = 32,
+                   chunk_steps: int = 128, **kw):
+        """Stream an open arrival process through the experiment's (single)
+        scenario for every policy (DESIGN.md §11): the job/task/packet
+        tensors become a ``slots``-deep recycling ring refilled from
+        ``arrivals`` (``repro.scenarios.arrivals``) at chunk boundaries, so
+        an unbounded trace runs in bounded memory.  Returns a
+        ``StreamResults`` with per-window p50/p99 sojourn, throughput,
+        utilization, energy, and per-class SLO attainment; completions
+        before ``warmup`` are excluded from ``summary()``.  A finite trace
+        that fits ``slots`` reproduces ``run()`` on the equivalent
+        ``streaming.ring_setup`` bitwise (tests/test_streaming.py).  Extra
+        keywords pass through to ``stream.run_stream``."""
+        from .stream import run_stream
+        return run_stream(self, arrivals, horizon, warmup=warmup,
+                          window=window, slots=slots,
+                          chunk_steps=chunk_steps, **kw)
+
 
 def _cross_failures(scenarios: List[Tuple[str, SimSetup]],
                     failures: Any) -> List[Tuple[str, SimSetup]]:

@@ -1723,10 +1723,17 @@ def init_fleet_carry(consts: EngineConsts, meta, width: int):
         (s0, cache0, done0))
 
 
-def make_fleet_chunk(meta, static_pol=None, chunk_steps: int = 32):
+def make_fleet_chunk(meta, static_pol=None, chunk_steps: int = 32,
+                     consts_axes=None):
     """Build the fleet's K-step cohort stepper (DESIGN.md §9):
     ``chunk(consts, pol, carry) -> carry`` advancing every live lane up to
     ``chunk_steps`` events, early-exiting when the whole cohort finishes.
+
+    ``consts_axes`` (default None: one consts shared by every lane) is a
+    vmap in_axes pytree over ``EngineConsts`` — the streaming ring
+    (DESIGN.md §11) maps the refillable job/task/packet leaves per lane
+    (axis 0) while topology/cluster leaves stay shared (None), because
+    lanes retire and reload ring slots at different times.
 
     ``carry`` is ``(SimState, cache, done)`` with a leading lane axis on
     every leaf (see ``init_fleet_carry``); ``pol`` holds the LANE-VARYING
@@ -1749,14 +1756,19 @@ def make_fleet_chunk(meta, static_pol=None, chunk_steps: int = 32):
         s, cache = _step(consts, meta, pol, aux, sc)
         return s, cache, _finished(consts, meta, s)
 
-    vstep = jax.vmap(lane_step, in_axes=(None, 0, 0, 0))
+    vstep = jax.vmap(lane_step, in_axes=(consts_axes, 0, 0, 0))
 
     def chunk(consts, pol, carry):
         # loop-invariant per-lane tensors hoisted OUT of the while loop,
         # mirroring the serial runner (XLA does not reliably hoist them
         # out of a vmapped while body itself)
-        vaux = jax.vmap(
-            lambda p: _make_aux(consts, {**p, **static_pol}))(pol)
+        if consts_axes is None:
+            vaux = jax.vmap(
+                lambda p: _make_aux(consts, {**p, **static_pol}))(pol)
+        else:
+            vaux = jax.vmap(
+                lambda c_, p: _make_aux(c_, {**p, **static_pol}),
+                in_axes=(consts_axes, 0))(consts, pol)
 
         def cond(c):
             i, (_s, _cache, done) = c

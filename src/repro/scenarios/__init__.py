@@ -1,5 +1,8 @@
 """Scenario & topology library: named topology×workload bundles plus a
 packed multi-topology sweep driver (DESIGN.md §5)."""
+from .arrivals import (Arrival, ArrivalProcess, DiurnalArrivals,
+                       PoissonArrivals, ServiceClass, TraceArrivals,
+                       as_workload)
 from .failures import failure_injector, random_failures
 from .registry import (Scenario, get_scenario, list_scenarios, make_cluster,
                        register)
@@ -12,4 +15,6 @@ __all__ = [
     "SweepResult", "pack_setups", "policy_arrays", "sweep_grid",
     "JobTemplate", "bursty_workload", "uniform_workload", "zipf_workload",
     "failure_injector", "random_failures",
+    "Arrival", "ArrivalProcess", "PoissonArrivals", "DiurnalArrivals",
+    "TraceArrivals", "ServiceClass", "as_workload",
 ]

@@ -257,6 +257,51 @@ def _leaf_spine_ctrl(n_spine: int = 4, n_leaf: int = 4,
     )
 
 
+@register("leaf-spine-stream")
+def _leaf_spine_stream(n_spine: int = 4, n_leaf: int = 4,
+                       hosts_per_leaf: int = 4, seed: int = 0,
+                       rate: float = 0.05, horizon: float = 240.0,
+                       urgent_share: float = 0.3, urgent_slo: float = 120.0,
+                       batch_slo: float = 600.0,
+                       max_jobs: Optional[int] = None) -> Scenario:
+    """Leaf-spine Clos under a two-class Poisson open-arrival mix — the
+    steady-state streaming scenario (DESIGN.md §11).  Registered with a
+    FINITE arrival preview (the trace below ``horizon``) so it runs under
+    ``Experiment.run`` like any scenario; ``Experiment.run_stream`` with
+    the same ``stream_arrivals(...)`` process streams it unbounded through
+    the slot-recycling ring.  The urgent class carries a priority weight
+    the ``job_selection=priority`` axis consumes, plus the tighter SLO the
+    windowed metrics grade."""
+    from .arrivals import as_workload
+    arrivals = stream_arrivals(rate=rate, seed=seed,
+                               urgent_share=urgent_share,
+                               urgent_slo=urgent_slo, batch_slo=batch_slo)
+    return Scenario(
+        name=f"leaf-spine-stream-{n_spine}x{n_leaf}",
+        topology=lambda: leaf_spine(n_spine, n_leaf, hosts_per_leaf),
+        workload=lambda: as_workload(arrivals, horizon, max_jobs=max_jobs),
+        description="leaf-spine Clos, two-class Poisson open arrivals "
+                    "(finite preview; stream via Experiment.run_stream)",
+    )
+
+
+def stream_arrivals(rate: float = 0.05, seed: int = 0,
+                    urgent_share: float = 0.3, urgent_slo: float = 120.0,
+                    batch_slo: float = 600.0):
+    """The ``leaf-spine-stream`` scenario's arrival process — importable so
+    ``run_stream`` users and the finite preview share one definition."""
+    from .arrivals import PoissonArrivals, ServiceClass
+    classes = (
+        ServiceClass("batch", weight=0.0, slo_s=batch_slo,
+                     share=1.0 - urgent_share),
+        ServiceClass("urgent", weight=2.0, slo_s=urgent_slo,
+                     share=urgent_share,
+                     template=JobTemplate(n_map=2, n_reduce=1),
+                     scale_lo=0.25, scale_hi=1.0),
+    )
+    return PoissonArrivals(rate=rate, classes=classes, seed=seed)
+
+
 @register("canonical-tree")
 def _canonical_tree(depth: int = 3, fanout: int = 2, hosts_per_edge: int = 4,
                     seed: int = 0, n_jobs: int = 6) -> Scenario:

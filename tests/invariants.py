@@ -23,10 +23,18 @@ The invariants:
   counters non-negative, nothing left parked INSTALLING at the end, and
   with the ctrl plane off every ctrl counter is zero and placement never
   moved.
+- ``check_slots``        — slot conservation (DESIGN.md §11): admitted ==
+  completed + in-flight over valid jobs, ``vm_load`` is EXACTLY the live
+  placed-task count per VM, and unadmitted jobs' slots are untouched —
+  the per-ring ledger the streaming refill relies on.
+- ``check_stream``       — streaming-run conservation + clock monotonicity
+  on a ``StreamResults``: every arrival loads and retires exactly once per
+  lane, boundary clocks and cumulative energy/busy never go backwards, and
+  per-job stamps are ordered.
 """
 import numpy as np
 
-from repro.core.mapreduce import DONE, INSTALLING, VOID
+from repro.core.mapreduce import ACTIVE, DONE, INSTALLING, VOID, WAITING
 
 _TOL = 1e-4
 
@@ -137,8 +145,75 @@ def check_ctrl(c, meta, s, label=""):
         f"{label}: migrated VM left the host range"
 
 
+def check_slots(c, meta, s, label=""):
+    """Slot conservation (DESIGN.md §11), valid on ANY state — final or a
+    streaming chunk boundary: the job ledger balances, ``vm_load`` equals
+    the live placed-task census, and unadmitted jobs' slots are pristine
+    (exactly what a ring refill resets them to)."""
+    job_valid = _np(c.job_valid)
+    admitted = _np(s.job_admitted)
+    out_done = _np(s.job_out_done)
+    n_out = _np(c.job_n_out)
+    assert not np.any(admitted & ~job_valid), f"{label}: pad job admitted"
+    assert np.all(out_done[job_valid] <= n_out[job_valid]), \
+        f"{label}: job over-completed (out_done > n_out)"
+    assert np.all(out_done[~job_valid] == 0), \
+        f"{label}: pad job produced outputs"
+    done_j = job_valid & (out_done >= n_out)
+    assert np.all(admitted[done_j]), f"{label}: job completed unadmitted"
+    in_flight = admitted & ~done_j
+    assert int(admitted.sum()) == int(done_j.sum()) + int(in_flight.sum()), \
+        f"{label}: admission ledger broken"
+    # vm_load is exactly the live (placed, not-DONE) valid-task census
+    task_valid = _np(c.task_valid)
+    st = _np(s.task_state)
+    vm = _np(s.task_vm)
+    vm_load = _np(s.vm_load)
+    live = task_valid & ((st == WAITING) | (st == ACTIVE)) & (vm >= 0)
+    census = np.bincount(vm[live], minlength=vm_load.shape[0])
+    assert np.array_equal(vm_load, census[:vm_load.shape[0]]), \
+        f"{label}: vm_load != live placed-task census " \
+        f"(load={vm_load.sum()}, census={census.sum()})"
+    # unadmitted valid jobs: their slots look freshly (re)loaded
+    tj = _np(c.task_job)
+    waiting_job = job_valid & ~admitted
+    tw = task_valid & waiting_job[np.clip(tj, 0, waiting_job.shape[0] - 1)]
+    assert np.all(st[tw] == WAITING), f"{label}: unadmitted job task moved"
+    assert np.all(vm[tw] == -1), f"{label}: unadmitted job task placed"
+    assert np.all(_np(s.task_got)[tw] == 0), \
+        f"{label}: unadmitted job task received input"
+
+
+def check_stream(res, label=""):
+    """Streaming conservation + clock monotonicity over a completed
+    ``repro.api.StreamResults`` (DESIGN.md §11)."""
+    st = res.stats
+    assert st.loads == st.retired, \
+        f"{label}: loads ({st.loads}) != retired ({st.retired})"
+    assert st.loads == st.trace_len * st.lanes, \
+        f"{label}: arrivals lost (loads={st.loads}, " \
+        f"trace={st.trace_len} x {st.lanes} lanes)"
+    assert st.refills == st.loads - min(st.slots, st.trace_len) * st.lanes, \
+        f"{label}: refill ledger broken"
+    for pi in range(res.n_policies):
+        lab = f"{label}/{res.policy_names[pi]}"
+        j = res.jobs[pi]
+        assert np.array_equal(np.sort(j["seq"]), np.arange(st.trace_len)), \
+            f"{lab}: arrivals not retired exactly once"
+        assert np.all(np.isfinite(j["t_done"])), f"{lab}: unfinished job row"
+        assert np.all(j["t_admit"] >= j["t_arr"] - _TOL), \
+            f"{lab}: job admitted before arrival"
+        assert np.all(j["t_done"] >= j["t_admit"] - _TOL), \
+            f"{lab}: job done before admission"
+        smp = res.samples[pi]
+        assert np.all(np.diff(smp[:, 0]) >= -_TOL), \
+            f"{lab}: boundary clock went backwards"
+        assert np.all(np.diff(smp[:, 1:], axis=0) >= -1e-3), \
+            f"{lab}: cumulative energy/busy went backwards"
+
+
 ALL_INVARIANTS = (check_terminal, check_clock, check_pad_inert,
-                  check_energy, check_ctrl)
+                  check_energy, check_ctrl, check_slots)
 
 
 def check_all(c, meta, s, label="", expect_stalled=False):

@@ -421,6 +421,10 @@ NO_FAILURE_SCENARIOS = [
     ("canonical-tree", dict(n_jobs=4)),
     ("leaf-spine-xl", dict(n_spine=2, n_leaf=2, hosts_per_leaf=2, n_jobs=4,
                            max_scale=1.5)),
+    # the streaming scenario's FINITE arrival preview (DESIGN.md §11) is an
+    # ordinary workload, so it belongs in the bit-identity grid too
+    ("leaf-spine-stream", dict(n_spine=2, n_leaf=2, hosts_per_leaf=2,
+                               horizon=160.0, max_jobs=4)),
 ]
 FAILURE_SCENARIOS = [
     ("paper-fabric-failures", dict(split=1)),

@@ -5,7 +5,8 @@ and every cell must satisfy every invariant in tests/invariants.py."""
 import jax
 import jax.numpy as jnp
 
-from invariants import ALL_INVARIANTS, check_all, grid_check_all
+from invariants import (ALL_INVARIANTS, check_all, check_slots, check_stream,
+                        grid_check_all)
 from repro.api import runners
 from repro.core.policies import (INSTALL_PROACTIVE, MIG_CONGESTION,
                                  PLACE_ROUND_ROBIN, PolicyConfig,
@@ -27,6 +28,7 @@ SCENARIOS = [
     ("leaf-spine-failures", dict(n_jobs=4)),
     ("paper-fabric-ctrl", dict(split=1)),
     ("leaf-spine-ctrl", dict(n_jobs=4)),
+    ("leaf-spine-stream", dict(horizon=160.0, max_jobs=4)),
 ]
 
 # one policy per branch family, cycling the secondary axes — including
@@ -91,3 +93,31 @@ def test_invariants_catch_violations():
     bad2 = s._replace(ctrl_installs=np.int32(3))
     with pytest.raises(AssertionError):
         check_all(c, meta, bad2, label="doctored-ctrl")
+    # slot conservation must be falsifiable too: resurrect one DONE task
+    # without a matching vm_load entry
+    ts = np.asarray(s.task_state).copy()
+    ts[np.flatnonzero(ts == 2)[0]] = 1   # DONE -> ACTIVE
+    with pytest.raises(AssertionError, match="census"):
+        check_slots(c, meta, s._replace(task_state=ts), label="doctored")
+
+
+def test_streaming_registry_invariants():
+    """Drive the streaming engine over registry scenarios and check the
+    streaming ledger (check_stream) plus every per-state invariant —
+    including slot conservation — on the drained final states against the
+    consts of each lane's LAST ring generation."""
+    from repro.api import Experiment
+    from repro.scenarios.registry import stream_arrivals
+
+    for scen, arrivals, horizon in [
+            ("leaf-spine", stream_arrivals(rate=0.08, seed=2), 120.0),
+            ("canonical-tree", stream_arrivals(rate=0.06, seed=3), 150.0)]:
+        exp = Experiment(scenarios=get_scenario(scen, n_jobs=2),
+                         policies=POLICIES[:2])
+        res = exp.run_stream(arrivals, horizon, slots=3, chunk_steps=48,
+                             return_states=True)
+        assert res.stats.refills > 0     # the ring actually recycled
+        check_stream(res, label=scen)
+        for pi in range(res.n_policies):
+            check_all(res.final_consts[pi], res.meta, res.final_states[pi],
+                      label=f"{scen}/{res.policy_names[pi]}")
