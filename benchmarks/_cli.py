@@ -1,0 +1,43 @@
+"""Shared CLI plumbing for the sweep benchmarks.
+
+Every sweep grew the same three flags (``--json``, ``--baseline``,
+``--max-regress``) and the same report-write block by copy-paste; this
+module is the single copy.  Behavior is identical to the previous
+inline versions — per-benchmark help strings come in as arguments.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+
+def add_json_arg(ap, help_text: str = "write the machine-readable report"):
+    ap.add_argument("--json", metavar="PATH", default=None, help=help_text)
+
+
+def add_gate_args(ap, baseline_name: str, regress_help: str):
+    """The perf-gate pair: ``--baseline`` names the committed BENCH_*.json
+    to diff against, ``--max-regress`` the allowed fractional drop."""
+    ap.add_argument("--baseline", metavar="PATH", default=None,
+                    help=f"committed {baseline_name} to gate against")
+    ap.add_argument("--max-regress", type=float, default=0.2,
+                    help=regress_help)
+
+
+def write_report(report: dict, path) -> None:
+    """Write the JSON report (no-op when ``path`` is falsy), creating the
+    parent directory exactly like the old inline blocks did."""
+    if not path:
+        return
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {path}")
+
+
+def gate(report: dict, args, check_regression) -> int:
+    """Run the benchmark's own ``check_regression`` against ``--baseline``
+    when given; 0 otherwise (the old trailing two lines of every main)."""
+    if args.baseline:
+        return check_regression(report, args.baseline, args.max_regress)
+    return 0

@@ -25,11 +25,14 @@ blind-to-traffic route choices and table churn (``rule_reinstalls``).
       --latencies 0 0.01 0.05 0.2 --json experiments/BENCH_ctrl.json
 """
 import argparse
-import json
-import os
 import time
 
 import jax
+
+try:
+    from . import _cli            # python -m benchmarks.<name>
+except ImportError:
+    import _cli                   # python benchmarks/<name>.py
 
 from repro.api import Experiment
 from repro.core import (CtrlPlaneConfig, INSTALL_PROACTIVE, PolicyConfig,
@@ -49,7 +52,7 @@ def main(argv=None):
                     help="registered scenario name to price the "
                     "controller on")
     ap.add_argument("--concurrency", type=int, default=2)
-    ap.add_argument("--json", metavar="PATH", default=None)
+    _cli.add_json_arg(ap)
     args = ap.parse_args(argv)
 
     t0 = time.time()
@@ -123,10 +126,7 @@ def main(argv=None):
             "sims_per_s": n / t_run,
             "rows": rows,
         }
-        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
-        with open(args.json, "w") as f:
-            json.dump(report, f, indent=1)
-        print(f"wrote {args.json}")
+        _cli.write_report(report, args.json)
 
 
 if __name__ == "__main__":

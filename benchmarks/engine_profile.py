@@ -24,12 +24,16 @@ baseline is refreshed in any PR that intentionally moves it).
 """
 import argparse
 import json
-import os
 import sys
 import time
 
 import jax
 import numpy as np
+
+try:
+    from . import _cli            # python -m benchmarks.<name>
+except ImportError:
+    import _cli                   # python benchmarks/<name>.py
 
 from repro.api import runners
 from repro.core import (PLACE_LEAST_USED, PLACE_RANDOM, PLACE_ROUND_ROBIN,
@@ -159,7 +163,9 @@ def profile_fleet(name: str, width: int, iters: int,
     walls = []
     for _ in range(iters):
         t0 = time.perf_counter()
-        exp.run_fleet(width=width)
+        # the retire path extracts to host numpy, but the explicit sync
+        # keeps the timing honest if that ever changes (jaxcheck:naked-timer)
+        jax.block_until_ready(exp.run_fleet(width=width).states)
         walls.append(time.perf_counter() - t0)
     wall = min(walls)
     return {
@@ -211,12 +217,9 @@ def main(argv=None) -> int:
                     help="comma-separated fleet cohort widths, e.g. "
                          "1,6,32 (default: per-tier; empty string skips "
                          "the fleet section)")
-    ap.add_argument("--json", metavar="PATH", default=None,
-                    help="write the machine-readable report")
-    ap.add_argument("--baseline", metavar="PATH", default=None,
-                    help="committed BENCH_engine.json to gate against")
-    ap.add_argument("--max-regress", type=float, default=0.2,
-                    help="allowed fractional steps/s drop vs --baseline")
+    _cli.add_json_arg(ap)
+    _cli.add_gate_args(ap, "BENCH_engine.json",
+                       "allowed fractional steps/s drop vs --baseline")
     args = ap.parse_args(argv)
 
     by_tier = {t: (name, bw, fw) for t, name, bw, fw in TIERS}
@@ -246,15 +249,8 @@ def main(argv=None) -> int:
                   f"{fr['sims_per_s']:8.1f} sims/s  "
                   f"batch_efficiency={fr['batch_efficiency']:.2f}x")
 
-    if args.json:
-        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
-        with open(args.json, "w") as f:
-            json.dump(report, f, indent=1)
-        print(f"wrote {args.json}")
-
-    if args.baseline:
-        return check_regression(report, args.baseline, args.max_regress)
-    return 0
+    _cli.write_report(report, args.json)
+    return _cli.gate(report, args, check_regression)
 
 
 if __name__ == "__main__":

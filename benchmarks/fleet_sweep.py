@@ -23,12 +23,16 @@ sims/s regresses more than ``--max-regress`` (default 20%).
 """
 import argparse
 import json
-import os
 import sys
 import time
 
 import jax
 import numpy as np
+
+try:
+    from . import _cli            # python -m benchmarks.<name>
+except ImportError:
+    import _cli                   # python benchmarks/<name>.py
 
 from repro.api import Experiment
 from repro.scenarios.failures import failure_injector
@@ -97,12 +101,9 @@ def main(argv=None) -> int:
                     help="fleet cohort width")
     ap.add_argument("--chunk-steps", type=int, default=64,
                     help="events per jitted chunk (K)")
-    ap.add_argument("--json", metavar="PATH", default=None,
-                    help="write the machine-readable report")
-    ap.add_argument("--baseline", metavar="PATH", default=None,
-                    help="committed BENCH_fleet.json to gate against")
-    ap.add_argument("--max-regress", type=float, default=0.2,
-                    help="allowed fractional aggregate sims/s drop")
+    _cli.add_json_arg(ap)
+    _cli.add_gate_args(ap, "BENCH_fleet.json",
+                       "allowed fractional aggregate sims/s drop")
     args = ap.parse_args(argv)
 
     t0 = time.perf_counter()
@@ -119,11 +120,15 @@ def main(argv=None) -> int:
     res, stats = exp.run_fleet(width=args.width,
                                chunk_steps=args.chunk_steps,
                                return_stats=True)
+    jax.block_until_ready(res.states)
     cold_s = time.perf_counter() - t0
     t0 = time.perf_counter()
     res, stats = exp.run_fleet(width=args.width,
                                chunk_steps=args.chunk_steps,
                                return_stats=True)
+    # sync before reading the clock so the number is the computation,
+    # not jax's async dispatch (jaxcheck:naked-timer)
+    jax.block_until_ready(res.states)
     wall_s = time.perf_counter() - t0
     agg = n / wall_s
 
@@ -151,15 +156,8 @@ def main(argv=None) -> int:
         "summary": summarize(res),
     }
 
-    if args.json:
-        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
-        with open(args.json, "w") as f:
-            json.dump(report, f, indent=1)
-        print(f"wrote {args.json}")
-
-    if args.baseline:
-        return check_regression(report, args.baseline, args.max_regress)
-    return 0
+    _cli.write_report(report, args.json)
+    return _cli.gate(report, args, check_regression)
 
 
 if __name__ == "__main__":

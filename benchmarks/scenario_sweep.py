@@ -14,12 +14,15 @@ single ``jit(vmap(...))`` call (DESIGN.md §5).
       --json experiments/BENCH_scenario_sweep.json
 """
 import argparse
-import json
-import os
 import time
 
 import jax
 import numpy as np
+
+try:
+    from . import _cli            # python -m benchmarks.<name>
+except ImportError:
+    import _cli                   # python benchmarks/<name>.py
 
 from repro.api import Experiment
 from repro.core import (PLACE_LEAST_USED, PLACE_RANDOM, PLACE_ROUND_ROBIN,
@@ -44,9 +47,8 @@ def main(argv=None):
     ap.add_argument("--seeds", type=int, default=1,
                     help="workload seeds per scenario")
     ap.add_argument("--concurrency", type=int, default=2)
-    ap.add_argument("--json", metavar="PATH", default=None,
-                    help="write a machine-readable benchmark report "
-                         "(wall times, steps/s, per-scenario rows)")
+    _cli.add_json_arg(ap, "write a machine-readable benchmark report "
+                          "(wall times, steps/s, per-scenario rows)")
     args = ap.parse_args(argv)
 
     t0 = time.time()
@@ -107,10 +109,7 @@ def main(argv=None):
                             "max_steps": res.meta.max_steps},
             "rows": rows,
         }
-        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
-        with open(args.json, "w") as f:
-            json.dump(report, f, indent=1)
-        print(f"wrote {args.json}")
+        _cli.write_report(report, args.json)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,28 @@
+"""jaxcheck: static analysis over the traced engine programs and the
+source tree (DESIGN.md §12).
+
+Two passes, one gate:
+
+* the **jaxpr pass** (``programs`` + ``checkers``) traces every registry
+  scenario x program kind to a ClosedJaxpr — nothing compiles or runs —
+  and proves structural invariants of the engine's hot while loop:
+  no packet-axis sorts or full-width scatters in the body, no silent
+  64-bit drift, the unbatched fast-path conds survive, donation is
+  aliasable, and the loop carry is stable across same-meta scenarios;
+* the **AST pass** (``astlint``) lints the source for tracer-unsafe
+  host idioms: builtin casts on traced values, unseeded RNG, naked
+  benchmark timers, legacy meta subscripts, frozen-struct mutation;
+* the **budget gate** (``budget``) diffs per-program watched-primitive
+  counts against the committed ``experiments/PRIM_BUDGET.json``.
+
+Everything drives through ``tools/jaxcheck.py``; falsifiability tests in
+``tests/test_jaxcheck.py`` prove each checker fires on a doctored
+program and stays quiet on a clean one.
+"""
+from .rules import AST_RULES, JAXPR_RULES, RULES, Finding  # noqa: F401
+from .checkers import WATCHED, ProgramTrace, analyze  # noqa: F401
+from .astlint import lint_source, lint_tree  # noqa: F401
+from .budget import (build_ledger, diff_ledger, load_ledger,  # noqa: F401
+                     refresh_ledger, save_ledger)
+from .programs import (clean_trace, doctored_trace, iter_traces,  # noqa: F401
+                       static_sigs)

@@ -1,0 +1,259 @@
+"""AST lint pass: engine-hygiene rules over the source tree
+(DESIGN.md §12), stdlib ``ast`` only — no new dependencies.
+
+Scope is deliberate: *engine* rules (tracer-unsafe builtins, 64-bit
+literals, frozen-struct mutation) run over ``src/repro/{core,api}``,
+benchmark rules (naked timers) over ``benchmarks/``, and determinism
+rules (RNG hygiene) over everything scanned.  Every rule id lives in
+``repro.analysis.rules`` and is documented in DESIGN.md §12.
+
+A finding on a line carrying ``# jaxcheck: disable=<rule>[,<rule>...]``
+is suppressed — that comment doubles as the in-tree justification for
+an intentional exception, the AST analogue of a PRIM_BUDGET allowlist
+entry.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Dict, List, Sequence, Set
+
+from .rules import AST_RULES, Finding
+
+ENGINE_PREFIXES = ("src/repro/core/", "src/repro/api/")
+SCAN_PREFIXES = ENGINE_PREFIXES + ("src/repro/scenarios/", "benchmarks/")
+TIMER_PREFIXES = ("benchmarks/",)
+
+# names whose attributes are traced values inside the step kernel by
+# repo convention: s/sc = SimState (+ step carry), pol/aux/cache = the
+# traced policy/auxiliary/endpoint-cache dicts
+TRACED_ATTR_ROOTS = {"s", "sc"}
+TRACED_SUBSCRIPT_ROOTS = {"pol", "aux", "cache"}
+
+# frozen structures: attribute assignment on these object names is a
+# mutation of EngineConsts / SimMeta outside a constructor
+FROZEN_ROOTS = {"meta", "consts"}
+
+SAFE_NP_RANDOM = {"default_rng", "RandomState", "Generator", "SeedSequence",
+                  "PCG64", "Philox", "BitGenerator"}
+
+TIMER_ATTRS = {"time", "perf_counter", "monotonic", "process_time"}
+SYNC_ATTRS = {"block_until_ready", "device_get"}
+
+DTYPE64 = {"float64", "int64", "uint64", "complex128"}
+
+_DISABLE_RE = re.compile(r"#\s*jaxcheck:\s*disable=([a-z0-9,\-]+)")
+
+
+def _suppressions(text: str) -> Dict[int, Set[str]]:
+    out: Dict[int, Set[str]] = {}
+    for i, line in enumerate(text.splitlines(), 1):
+        m = _DISABLE_RE.search(line)
+        if m:
+            out[i] = set(m.group(1).split(","))
+    return out
+
+
+def _name_of(node) -> str:
+    return node.id if isinstance(node, ast.Name) else ""
+
+
+def _attr_chain(node) -> str:
+    """Dotted name for Name/Attribute chains ('np.random.rand'), '' if the
+    chain roots in something else (a call, a subscript, ...)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, relpath: str):
+        self.relpath = relpath
+        self.engine = relpath.startswith(ENGINE_PREFIXES)
+        self.timers = relpath.startswith(TIMER_PREFIXES)
+        self.meta_rule = (relpath.startswith(("src/repro/",))
+                         and not relpath.endswith("simmeta.py"))
+        self.func_stack: List[str] = []
+        self.findings: List[Finding] = []
+
+    # -- plumbing ----------------------------------------------------------
+
+    def _scope(self) -> str:
+        return self.func_stack[-1] if self.func_stack else "<module>"
+
+    def _add(self, rule: str, node, message: str) -> None:
+        self.findings.append(Finding(
+            rule=rule,
+            where=f"{self.relpath}:{node.lineno}",
+            message=message,
+            key=f"{rule}:{self.relpath}:{self._scope()}"))
+
+    # -- function scope (naked-timer + frozen-mutation constructor rule) --
+
+    def _visit_func(self, node) -> None:
+        self.func_stack.append(node.name)
+        if self.timers:
+            self._check_naked_timer(node)
+        self.generic_visit(node)
+        self.func_stack.pop()
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
+
+    def _check_naked_timer(self, fn) -> None:
+        """jaxcheck:naked-timer — a function bracketing work with two or
+        more timer reads but never forcing a device sync measures jax's
+        async dispatch, not the computation."""
+        n_timers, synced = 0, False
+        for sub in ast.walk(fn):
+            if isinstance(sub, ast.Call):
+                chain = _attr_chain(sub.func)
+                if chain.startswith("time.") and \
+                        chain.split(".", 1)[1] in TIMER_ATTRS:
+                    n_timers += 1
+                if isinstance(sub.func, ast.Attribute) and \
+                        sub.func.attr in SYNC_ATTRS:
+                    synced = True
+        if n_timers >= 2 and not synced:
+            self.func_stack.append(fn.name)   # key under the fn itself
+            self._add("naked-timer", fn,
+                      f"{fn.name}() reads a timer {n_timers}x but never "
+                      "calls block_until_ready/device_get")
+            self.func_stack.pop()
+
+    # -- calls: tracer casts, .item(), np.random, 64-bit dtype sinks ------
+
+    def visit_Call(self, node: ast.Call) -> None:
+        fname = _name_of(node.func)
+        if self.engine and fname in {"float", "int", "bool"} and node.args:
+            if self._touches_traced(node.args[0]):
+                self._add("tracer-cast", node,
+                          f"{fname}() on a likely-traced value — a "
+                          "TracerError under jit; use jnp casts")
+        if self.engine and isinstance(node.func, ast.Attribute) \
+                and node.func.attr == "item":
+            self._add("item-call", node,
+                      ".item() forces a device sync and breaks under jit")
+        chain = _attr_chain(node.func)
+        if chain.startswith(("np.random.", "numpy.random.")):
+            leaf = chain.rsplit(".", 1)[1]
+            if leaf not in SAFE_NP_RANDOM:
+                self._add("unseeded-random", node,
+                          f"{chain}() uses the process-global legacy RNG")
+        self.generic_visit(node)
+
+    def _touches_traced(self, node) -> bool:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Attribute) and \
+                    _name_of(sub.value) in TRACED_ATTR_ROOTS:
+                return True
+            if isinstance(sub, ast.Subscript) and \
+                    _name_of(sub.value) in TRACED_SUBSCRIPT_ROOTS:
+                return True
+        return False
+
+    # -- imports: the stdlib random module --------------------------------
+
+    def visit_Import(self, node: ast.Import) -> None:
+        for alias in node.names:
+            if alias.name == "random" or alias.name.startswith("random."):
+                self._add("random-module", node,
+                          "stdlib random is unseeded and process-global")
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        if node.module == "random":
+            self._add("random-module", node,
+                      "stdlib random is unseeded and process-global")
+        self.generic_visit(node)
+
+    # -- subscripts: legacy meta["..."] access ----------------------------
+
+    def visit_Subscript(self, node: ast.Subscript) -> None:
+        if self.meta_rule and _name_of(node.value) == "meta":
+            sl = node.slice
+            if isinstance(sl, ast.Constant) and isinstance(sl.value, str):
+                self._add("meta-subscript", node,
+                          f'meta[{sl.value!r}] — use meta.{sl.value} on '
+                          "the frozen SimMeta")
+        self.generic_visit(node)
+
+    # -- assignments: frozen-struct mutation ------------------------------
+
+    def _check_frozen(self, target) -> None:
+        if isinstance(target, ast.Attribute) and \
+                _name_of(target.value) in FROZEN_ROOTS and \
+                self._scope() not in ("__init__", "__post_init__"):
+            self._add("frozen-mutation", target,
+                      f"assignment to {_name_of(target.value)}."
+                      f"{target.attr} — EngineConsts/SimMeta are frozen; "
+                      "use _replace()/dataclasses.replace()")
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        if self.relpath.startswith(("src/repro/",)):
+            for t in node.targets:
+                self._check_frozen(t)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        if self.relpath.startswith(("src/repro/",)):
+            self._check_frozen(node.target)
+        self.generic_visit(node)
+
+    # -- 64-bit jnp literals ----------------------------------------------
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        if self.engine and node.attr in DTYPE64:
+            chain = _attr_chain(node)
+            if chain.startswith(("jnp.", "jax.numpy.")):
+                self._add("f64-literal", node,
+                          f"{chain} in engine code — the engine is f32 "
+                          "end-to-end (np 64-bit on the host is fine)")
+        self.generic_visit(node)
+
+
+def lint_source(text: str, relpath: str) -> List[Finding]:
+    """Lint one file's source.  ``relpath`` (posix, repo-relative) decides
+    which rule scopes apply."""
+    try:
+        tree = ast.parse(text)
+    except SyntaxError as e:
+        return [Finding(rule="tracer-cast", severity="error",
+                        where=f"{relpath}:{e.lineno or 0}",
+                        message=f"unparsable: {e.msg}",
+                        key=f"parse:{relpath}")]
+    linter = _Linter(relpath)
+    linter.visit(tree)
+    suppressed = _suppressions(text)
+    out = []
+    for f in linter.findings:
+        line = int(f.where.rsplit(":", 1)[1])
+        if f.rule in suppressed.get(line, ()):
+            continue
+        out.append(f)
+    return out
+
+
+def lint_tree(root, prefixes: Sequence[str] = SCAN_PREFIXES) -> List[Finding]:
+    """Lint every .py file under the scanned prefixes of ``root``."""
+    root = Path(root)
+    findings: List[Finding] = []
+    for prefix in prefixes:
+        base = root / prefix
+        if not base.exists():
+            continue
+        for py in sorted(base.rglob("*.py")):
+            rel = py.relative_to(root).as_posix()
+            findings += lint_source(py.read_text(), rel)
+    return findings
+
+
+assert set(AST_RULES) >= {"tracer-cast", "item-call", "unseeded-random",
+                          "random-module", "naked-timer", "meta-subscript",
+                          "frozen-mutation", "f64-literal"}

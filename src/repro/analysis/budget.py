@@ -1,0 +1,159 @@
+"""The committed primitive-budget ledger (experiments/PRIM_BUDGET.json)
+and its diff gate (DESIGN.md §12).
+
+The ledger pins, per traced program, the watched-primitive counts inside
+the engine loop body plus the loop-carry signature.  CI re-derives the
+counts from the current tree and diffs them against the committed file:
+
+* a watched primitive whose count INCREASED fails — "a sort crept back
+  into the xl loop" is exactly this diff, with the offending eqn's
+  source location printed by the paired jaxpr findings;
+* ``cond`` is the one inversion: a DECREASE fails, because losing a
+  ``lax.cond`` means an unbatched fast path collapsed into a
+  both-branches ``select_n`` (jaxcheck:batched-cond);
+* a changed carry signature (leaves/bytes/digest) fails — the compiled
+  while-loop state changed shape, which is never an accident;
+* entries under ``allowlist`` are waived with a recorded reason — the
+  reviewed way to land an intentional budget change without refreshing
+  the whole file.  Keys are ``<program>:<prim>`` (or ``<program>:carry``)
+  and contain no line numbers, so they survive unrelated edits.
+
+The ledger records the ``jax`` version that produced it.  When the
+running version differs (CI installs jax unpinned), count and carry
+mismatches demote to warnings: primitive lowering legitimately shifts
+across jax releases, and a version bump should prompt a reviewed
+``--update-baseline``, not a red X on an unrelated PR.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+import jax
+
+from .checkers import WATCHED
+from .rules import Finding
+
+LEDGER_VERSION = 1
+
+
+def build_ledger(programs: Dict[str, dict],
+                 allowlist: Optional[Dict[str, str]] = None) -> dict:
+    return {
+        "version": LEDGER_VERSION,
+        "jax": jax.__version__,
+        "watched": list(WATCHED),
+        "allowlist": dict(allowlist or {}),
+        "programs": {k: programs[k] for k in sorted(programs)},
+    }
+
+
+def load_ledger(path) -> Optional[dict]:
+    p = Path(path)
+    if not p.exists():
+        return None
+    with open(p) as f:
+        return json.load(f)
+
+
+def save_ledger(ledger: dict, path) -> None:
+    p = Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    with open(p, "w") as f:
+        json.dump(ledger, f, indent=1, sort_keys=True)
+        f.write("\n")
+
+
+def refresh_ledger(programs: Dict[str, dict],
+                   old: Optional[dict]) -> dict:
+    """--update-baseline: new counts, but the reviewed allowlist (and its
+    reasons) carries over."""
+    allow = dict(old.get("allowlist", {})) if old else {}
+    return build_ledger(programs, allow)
+
+
+def _diff_program(key: str, cur: dict, base: dict,
+                  allow: Dict[str, str], demote: bool) -> List[Finding]:
+    out: List[Finding] = []
+    sev = "warning" if demote else "error"
+
+    def finding(rule: str, akey: str, message: str) -> Optional[Finding]:
+        if akey in allow:
+            return None
+        return Finding(rule=rule, where=key, message=message, key=akey,
+                       severity=sev)
+
+    cur_loop, base_loop = cur.get("loop", {}), base.get("loop", {})
+    for prim in WATCHED:
+        c, b = int(cur_loop.get(prim, 0)), int(base_loop.get(prim, 0))
+        if prim == "cond":
+            if c < b:
+                f = finding("batched-cond", f"{key}:cond",
+                            f"cond count fell {b} -> {c}: a fast-path "
+                            "lax.cond was batched away")
+                if f:
+                    out.append(f)
+        elif c > b:
+            rule = ("sort-in-loop" if prim == "sort"
+                    else "scatter-in-loop" if prim.startswith("scatter")
+                    else "dtype-drift" if prim == "convert_element_type"
+                    else "batched-cond" if prim == "select_n"
+                    else "carry-stability")
+            f = finding(rule, f"{key}:{prim}",
+                        f"{prim} count grew {b} -> {c} in the engine "
+                        "loop body (budget: experiments/PRIM_BUDGET.json)")
+            if f:
+                out.append(f)
+    cur_carry, base_carry = cur.get("carry"), base.get("carry")
+    if cur_carry != base_carry:
+        f = finding("carry-stability", f"{key}:carry",
+                    f"loop carry signature changed: {base_carry} -> "
+                    f"{cur_carry}")
+        if f:
+            out.append(f)
+    return out
+
+
+def diff_ledger(programs: Dict[str, dict], baseline: dict,
+                full_sweep: bool = True) -> Tuple[List[Finding], List[str]]:
+    """Diff freshly derived budget rows against the committed baseline.
+
+    Returns ``(findings, notes)``.  ``full_sweep=False`` (a --quick or
+    filtered run) skips the missing/extra-program checks — a subset sweep
+    legitimately derives fewer rows than the committed file holds.
+    """
+    findings: List[Finding] = []
+    notes: List[str] = []
+    allow = baseline.get("allowlist", {})
+    demote = baseline.get("jax") != jax.__version__
+    if demote:
+        notes.append(
+            f"baseline jax {baseline.get('jax')} != running jax "
+            f"{jax.__version__}: budget mismatches demoted to warnings — "
+            "refresh with --update-baseline")
+    base_programs = baseline.get("programs", {})
+    for key, cur in programs.items():
+        base = base_programs.get(key)
+        if base is None:
+            if full_sweep and f"{key}:new" not in allow:
+                # a brand-new program (new scenario / policy choice) is an
+                # error even under a jax-version demotion: the committed
+                # ledger must cover the whole registry.
+                findings.append(Finding(
+                    rule="carry-stability", where=key, severity="error",
+                    message="program not in the committed budget — run "
+                            "tools/jaxcheck.py --update-baseline",
+                    key=f"{key}:new"))
+            continue
+        findings += _diff_program(key, cur, base, allow, demote)
+    if full_sweep:
+        for key in base_programs:
+            if key not in programs and f"{key}:gone" not in allow:
+                findings.append(Finding(
+                    rule="carry-stability", where=key, severity="error",
+                    message="program in the committed budget but not in "
+                            "the sweep (scenario or signature removed?) — "
+                            "run tools/jaxcheck.py --update-baseline",
+                    key=f"{key}:gone"))
+    return findings, notes

@@ -1,0 +1,132 @@
+"""Recursive jaxpr walking + engine-loop extraction (DESIGN.md §12).
+
+The checkers in ``repro.analysis.checkers`` never pattern-match source
+code; they inspect the TRACED program.  This module is the substrate: a
+depth-first walk over a (closed) jaxpr that descends into every
+sub-jaxpr an equation carries in its params — ``while`` (cond/body),
+``cond`` (branches), ``scan``, ``pjit``, ``custom_jvp_call``, remat —
+without hard-coding the param names, plus extraction of *the engine
+while loop* (the eqn with the widest carry; the simulator is one
+``lax.while_loop`` whose carry is the full ``SimState`` + caches, so
+nested ``fori_loop`` lowerings never win the tie).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import Counter
+from typing import Iterator, List, Optional, Sequence, Tuple
+
+from jax.extend import core as jex_core
+
+Jaxpr = jex_core.Jaxpr
+ClosedJaxpr = jex_core.ClosedJaxpr
+
+
+def sub_jaxprs(eqn) -> List[Jaxpr]:
+    """Every Jaxpr reachable from ``eqn.params``, unwrapped from
+    ClosedJaxpr / tuple / list containers (while, cond, scan, pjit,
+    custom_jvp, ... all store their sub-programs there)."""
+    out: List[Jaxpr] = []
+
+    def rec(v):
+        if isinstance(v, ClosedJaxpr):
+            out.append(v.jaxpr)
+        elif isinstance(v, Jaxpr):
+            out.append(v)
+        elif isinstance(v, (tuple, list)):
+            for x in v:
+                rec(x)
+
+    for val in eqn.params.values():
+        rec(val)
+    return out
+
+
+def walk(jaxpr: Jaxpr, path: Tuple[str, ...] = ()) -> Iterator[tuple]:
+    """Depth-first ``(eqn, path)`` over ``jaxpr`` and every sub-jaxpr.
+    ``path`` elements are ``"<eqn-index>:<primitive>"`` segments, so a
+    finding can say *where inside the program* it sits."""
+    for i, eqn in enumerate(jaxpr.eqns):
+        p = path + (f"{i}:{eqn.primitive.name}",)
+        yield eqn, p
+        for sub in sub_jaxprs(eqn):
+            yield from walk(sub, p)
+
+
+def source_of(eqn) -> str:
+    """``file:line (fn)`` for an equation, best-effort."""
+    try:
+        from jax._src import source_info_util
+        return source_info_util.summarize(eqn.source_info)
+    except Exception:
+        return "<unknown>"
+
+
+def prim_counter(jaxpr: Jaxpr) -> Counter:
+    """Primitive-name counts over ``jaxpr`` including all sub-jaxprs."""
+    c: Counter = Counter()
+    for eqn, _ in walk(jaxpr):
+        c[eqn.primitive.name] += 1
+    return c
+
+
+@dataclasses.dataclass
+class LoopInfo:
+    """One extracted ``while`` eqn: its body/cond jaxprs and carry avals
+    (the body invars past the loop's hoisted consts)."""
+    eqn: object
+    path: Tuple[str, ...]
+    body: Jaxpr
+    cond: Jaxpr
+    carry_avals: Sequence[object]
+
+    @property
+    def carry_leaves(self) -> int:
+        return len(self.carry_avals)
+
+
+def _loop_info(eqn, path) -> LoopInfo:
+    body = eqn.params["body_jaxpr"].jaxpr
+    cond = eqn.params["cond_jaxpr"].jaxpr
+    nconsts = eqn.params["body_nconsts"]
+    carry = [v.aval for v in body.invars[nconsts:]]
+    return LoopInfo(eqn=eqn, path=path, body=body, cond=cond,
+                    carry_avals=carry)
+
+
+def while_loops(jaxpr: Jaxpr) -> List[LoopInfo]:
+    return [_loop_info(eqn, path) for eqn, path in walk(jaxpr)
+            if eqn.primitive.name == "while"]
+
+
+def engine_loop(closed) -> Optional[LoopInfo]:
+    """The engine event loop of a traced program: the ``while`` eqn with
+    the widest carry (the full SimState + endpoint cache + done flag —
+    every nested ``fori_loop`` carries a handful of leaves at most).
+    ``None`` when the program has no while loop (e.g. the streaming
+    refill, which is a pure masked rewrite)."""
+    jaxpr = closed.jaxpr if isinstance(closed, ClosedJaxpr) else closed
+    loops = while_loops(jaxpr)
+    if not loops:
+        return None
+    return max(loops, key=lambda li: li.carry_leaves)
+
+
+def aval_sig(aval) -> Tuple[Tuple[int, ...], str]:
+    return tuple(getattr(aval, "shape", ())), str(getattr(aval, "dtype", "?"))
+
+
+def carry_signature(avals: Sequence[object]) -> Tuple[int, int, str]:
+    """``(leaves, bytes, sha1-12)`` of a carry's structure — the ledger
+    entry that makes silent carry growth (an extra leaf, a widened dtype)
+    a visible budget diff."""
+    sigs = [aval_sig(a) for a in avals]
+    nbytes = 0
+    for a in avals:
+        n = 1
+        for d in getattr(a, "shape", ()):
+            n *= int(d)
+        nbytes += n * getattr(getattr(a, "dtype", None), "itemsize", 4)
+    digest = hashlib.sha1(repr(sigs).encode()).hexdigest()[:12]
+    return len(sigs), nbytes, digest

@@ -1,0 +1,265 @@
+"""Traced-program sweep for the jaxpr pass (DESIGN.md §12).
+
+``iter_traces`` yields a ``ProgramTrace`` for every registry scenario x
+program kind — the serial runner (``make_packed_simulator`` exactly as
+``runners.get_runner`` jits it), the fleet chunk (``make_fleet_chunk``,
+one trace per static policy signature: the routing/traffic/placement
+combos the cohort scheduler specializes on), and the streaming refill
+(``core.streaming.make_refill``).  Tracing is abstract — nothing is
+compiled or executed, so even leaf-spine-xl traces in well under a
+second — which is the whole point: the invariants are proven before
+anything runs.
+
+``doctored_trace`` builds minimal programs that VIOLATE each rule; the
+falsifiability tests (tests/test_jaxcheck.py) and the CLI's ``--seed``
+flag both use it to prove every checker actually fires.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..api import runners
+from ..api.fleet import STATIC_FIELDS
+from ..core.engine import init_fleet_carry, make_consts, make_fleet_chunk
+from ..core.policies import as_policy_arrays, policy_fields
+from ..core.streaming import STREAM_FIELDS, make_refill
+from .checkers import ProgramTrace
+
+FLEET_WIDTH = 4        # lane count for fleet/refill traces: the eqn
+#                        structure is width-independent, so small is fine
+CHUNK_STEPS = 32
+
+_SCN_CACHE: Dict[str, tuple] = {}
+
+
+def scenario_consts(name: str):
+    """(consts, meta) for a registry scenario, cached per process — the
+    host-side build (route DFS etc.) dominates sweep time otherwise."""
+    if name not in _SCN_CACHE:
+        from ..scenarios import get_scenario
+        setup = get_scenario(name).build()
+        _SCN_CACHE[name] = make_consts(setup)
+    return _SCN_CACHE[name]
+
+
+def axes_of(consts, meta) -> Dict[str, int]:
+    return {
+        "jobs": int(consts.job_valid.shape[0]),
+        "tasks": int(consts.task_job.shape[0]),
+        "packets": int(consts.pkt_job.shape[0]),
+        "links": int(meta.n_links),
+        "vms": int(meta.n_vms),
+    }
+
+
+def static_sigs() -> List[Tuple[int, ...]]:
+    """Every static policy signature the fleet specializes on: the cross
+    product of the registered choices of the STATIC_FIELDS axes (today
+    routing x traffic x placement = 2*2*3 = 12), derived from the policy
+    registry so a new branch value automatically widens the sweep."""
+    fields = {f.name: f for f in policy_fields()}
+    per_axis = [sorted((fields[n].choices or {n: fields[n].default}).values())
+                for n in STATIC_FIELDS]
+    return [tuple(sig) for sig in itertools.product(*per_axis)]
+
+
+def sig_label(sig: Sequence[int]) -> str:
+    fields = {f.name: f for f in policy_fields()}
+    return "-".join(fields[n].choice_name(v)
+                    for n, v in zip(STATIC_FIELDS, sig))
+
+
+def _sds(x) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(jnp.shape(x), jnp.result_type(x))
+
+
+def trace_serial(name: str) -> ProgramTrace:
+    """The serial runner program, via the ``runners.traced_jaxpr`` hook —
+    the SAME fn ``get_runner(meta, "single")`` would jit (policies are
+    traced arguments here, so one trace covers every policy value)."""
+    consts, meta = scenario_consts(name)
+    pol = as_policy_arrays(None)
+    closed, n_state = runners.traced_jaxpr(meta, "single", consts, pol)
+    return ProgramTrace(
+        key=f"{name}/serial", kind="serial", scenario=name, meta=meta,
+        closed=closed, axes=axes_of(consts, meta), donated=n_state)
+
+
+def trace_fleet(name: str, sig: Tuple[int, ...],
+                width: int = FLEET_WIDTH,
+                chunk_steps: int = CHUNK_STEPS) -> ProgramTrace:
+    """One fleet chunk program: static fields closed over as Python ints
+    (this is what keeps its dispatch specialized — see the batch-wall
+    notes in DESIGN.md §9), lane-varying fields as [W] arrays."""
+    consts, meta = scenario_consts(name)
+    chunk = make_fleet_chunk(meta, dict(zip(STATIC_FIELDS, sig)),
+                             chunk_steps)
+    carry0 = jax.eval_shape(lambda c: init_fleet_carry(c, meta, width),
+                            consts)
+    pol = {k: jax.ShapeDtypeStruct((width,), v.dtype)
+           for k, v in as_policy_arrays(None).items()
+           if k not in STATIC_FIELDS}
+    closed = jax.make_jaxpr(chunk)(consts, pol, carry0)
+    return ProgramTrace(
+        key=f"{name}/fleet/{sig_label(sig)}", kind="fleet", scenario=name,
+        meta=meta, closed=closed, axes=axes_of(consts, meta), sig=tuple(sig),
+        donated=len(jax.tree_util.tree_leaves(carry0)))
+
+
+def trace_refill(name: str, width: int = FLEET_WIDTH) -> ProgramTrace:
+    """The streaming refill program for this scenario's meta: streamed
+    consts leaves carry a [W] lane axis, everything else is shared —
+    exactly how ``Experiment.run_stream`` invokes it."""
+    consts, meta = scenario_consts(name)
+    axes = axes_of(consts, meta)
+    refill = make_refill(meta)
+    vconsts = type(consts)(**{
+        f: jax.ShapeDtypeStruct((width,) + jnp.shape(getattr(consts, f)),
+                                jnp.result_type(getattr(consts, f)))
+        if f in STREAM_FIELDS else _sds(getattr(consts, f))
+        for f in consts._fields})
+    carry0 = jax.eval_shape(lambda c: init_fleet_carry(c, meta, width),
+                            consts)
+    masks = [jax.ShapeDtypeStruct((width, axes[a]), jnp.bool_)
+             for a in ("jobs", "tasks", "packets")]
+    lane_m = jax.ShapeDtypeStruct((width,), jnp.bool_)
+    closed = jax.make_jaxpr(refill)(vconsts, carry0, *masks, lane_m)
+    return ProgramTrace(
+        key=f"{name}/refill", kind="refill", scenario=name, meta=meta,
+        closed=closed, axes=axes, expect_loop=False,
+        expect_loop_cond=False)
+
+
+def iter_traces(scenarios: Optional[Sequence[str]] = None,
+                sigs: Optional[Sequence[Tuple[int, ...]]] = None,
+                kinds: Sequence[str] = ("serial", "fleet", "refill"),
+                width: int = FLEET_WIDTH,
+                chunk_steps: int = CHUNK_STEPS,
+                progress=None) -> Iterator[ProgramTrace]:
+    """The full sweep: every registry scenario x kind (x static signature
+    for the fleet kind).  ``progress`` (a callable taking one string) gets
+    a line per program for long runs."""
+    if scenarios is None:
+        from ..scenarios import list_scenarios
+        scenarios = list_scenarios()
+    if sigs is None:
+        sigs = static_sigs()
+    for name in scenarios:
+        if "serial" in kinds:
+            if progress:
+                progress(f"trace {name}/serial")
+            yield trace_serial(name)
+        if "fleet" in kinds:
+            for sig in sigs:
+                if progress:
+                    progress(f"trace {name}/fleet/{sig_label(sig)}")
+                yield trace_fleet(name, sig, width, chunk_steps)
+        if "refill" in kinds:
+            if progress:
+                progress(f"trace {name}/refill")
+            yield trace_refill(name, width)
+
+
+# --- doctored programs: one per rule, used to PROVE the checkers fire ----
+
+def doctored_trace(rule: str, n_packets: int = 64) -> ProgramTrace:
+    """A minimal program that VIOLATES ``rule`` (falsifiability: a checker
+    that cannot be tripped is not checking anything).  Axes mimic a tiny
+    scenario with ``n_packets`` packets."""
+    axes = {"packets": n_packets, "tasks": 8, "jobs": 2, "links": 4,
+            "vms": 2}
+    x = jax.ShapeDtypeStruct((n_packets,), jnp.float32)
+
+    if rule == "sort-in-loop":
+        def prog(v):
+            def body(c):
+                i, w = c
+                return i + 1, jnp.sort(w)           # the retired regression
+
+            return jax.lax.while_loop(lambda c: c[0] < 3, body, (0, v))
+
+        closed = jax.make_jaxpr(prog)(x)
+
+    elif rule == "scatter-in-loop":
+        def prog(v):
+            def body(c):
+                i, w = c
+                idx = jnp.arange(n_packets)[::-1]
+                return i + 1, w.at[idx].set(w)      # full-width scatter
+
+            return jax.lax.while_loop(lambda c: c[0] < 3, body, (0, v))
+
+        closed = jax.make_jaxpr(prog)(x)
+
+    elif rule == "dtype-drift":
+        def prog(v):
+            def body(c):
+                i, w = c
+                wide = w.astype(jnp.float32)        # f16 -> f32 widening
+                return i + 1, wide.astype(jnp.float16)
+
+            return jax.lax.while_loop(lambda c: c[0] < 3, body, (0, v))
+
+        closed = jax.make_jaxpr(prog)(
+            jax.ShapeDtypeStruct((n_packets,), jnp.float16))
+
+    elif rule == "batched-cond":
+        def prog(v):
+            def body(c):
+                i, w = c
+                # no lax.cond anywhere: every "fast path" is a select
+                return i + 1, jnp.where(w > 0, w * 2.0, w)
+
+            return jax.lax.while_loop(lambda c: c[0] < 3, body, (0, v))
+
+        closed = jax.make_jaxpr(prog)(x)
+
+    elif rule == "donation":
+        def prog(v, s):
+            def body(c):
+                i, w = c
+                return i + 1, w + 1.0
+
+            _, out = jax.lax.while_loop(lambda c: c[0] < 3, body, (0, v))
+            return out.astype(jnp.int32)            # donated f32 has no
+            #                                         f32 output to alias
+
+        closed = jax.make_jaxpr(prog)(x, x)
+        return ProgramTrace(
+            key="doctored/donation", kind="doctored", scenario="doctored",
+            meta="doctored-meta", closed=closed, axes=axes, donated=1)
+
+    else:
+        raise ValueError(f"no doctored program for rule {rule!r}")
+
+    return ProgramTrace(
+        key=f"doctored/{rule}", kind="doctored", scenario="doctored",
+        meta="doctored-meta", closed=closed, axes=axes)
+
+
+def clean_trace(n_packets: int = 64) -> ProgramTrace:
+    """The doctored programs' innocent twin: a while loop that keeps a
+    lax.cond fast path, touches no packet-axis sort/scatter, stays f32,
+    and aliases its donated input — must pass every checker."""
+    axes = {"packets": n_packets, "tasks": 8, "jobs": 2, "links": 4,
+            "vms": 2}
+    x = jax.ShapeDtypeStruct((n_packets,), jnp.float32)
+
+    def prog(v, s):
+        def body(c):
+            i, w = c
+            w = jax.lax.cond(i % 2 == 0, lambda a: a + 1.0,
+                             lambda a: a, w)
+            return i + 1, w
+
+        _, out = jax.lax.while_loop(lambda c: c[0] < 3, body, (0, v + s))
+        return out
+
+    closed = jax.make_jaxpr(prog)(x, x)
+    return ProgramTrace(
+        key="doctored/clean", kind="doctored", scenario="doctored",
+        meta="doctored-meta", closed=closed, axes=axes, donated=1)

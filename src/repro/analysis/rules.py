@@ -1,0 +1,89 @@
+"""Rule catalog + finding model for the static-analysis passes
+(DESIGN.md §12).
+
+Every rule has a stable kebab-case id.  Code and docs reference a rule as
+a ``jaxcheck:<id>`` token — ``tools/check_design_refs.py`` resolves those
+tokens against the DESIGN.md §12 catalog exactly like section references
+in docstrings, so a rule cannot be cited without being documented.
+
+Findings carry two locations: ``where`` is the precise spot (``file:line``
+for AST findings, ``program @ jaxpr-path [source]`` for jaxpr findings)
+and ``key`` is the STABLE identity used by the ``allowlist`` section of
+``experiments/PRIM_BUDGET.json`` — keys never embed line numbers, so an
+allowlisted finding survives unrelated edits to the same file.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str          # rule id from RULES
+    where: str         # file:line or "<program> @ <jaxpr path> [<source>]"
+    message: str
+    key: str           # stable allowlist key (no line numbers)
+    severity: str = "error"
+
+    def render(self) -> str:
+        return (f"[{self.severity}] {self.rule}: {self.message}\n"
+                f"    at  {self.where}\n"
+                f"    key {self.key}")
+
+
+# --- jaxpr-pass rules (repro.analysis.checkers) ---------------------------
+JAXPR_RULES = {
+    "sort-in-loop": (
+        "a sort over the packet axis inside the engine while-loop body — "
+        "the per-step packet sorts PR 5/6 retired must not come back"),
+    "scatter-in-loop": (
+        "a full-width packet-axis scatter inside the engine while-loop "
+        "body (single-element pops and segment-sums are budgeted, not "
+        "forbidden)"),
+    "dtype-drift": (
+        "a 64-bit leaf in the loop carry, or a widening "
+        "convert_element_type (f32->f64, i32->i64, f16->f32) inside the "
+        "loop body — silent promotion doubles carry traffic"),
+    "carry-stability": (
+        "programs sharing a SimMeta and kind disagree on the while-loop "
+        "carry structure (leaf count / shapes / dtypes)"),
+    "batched-cond": (
+        "an engine loop body with no lax.cond left at all — every "
+        "skip-when-idle fast path has been batched into "
+        "both-branches select_n"),
+    "donation": (
+        "the jitted runner's donation policy is wrong for a backend, or a "
+        "donated input aval has no matching output aval to alias into"),
+}
+
+# --- AST-pass rules (repro.analysis.astlint) ------------------------------
+AST_RULES = {
+    "tracer-cast": (
+        "float()/int()/bool() applied to a likely-traced value "
+        "(state/consts attribute or pol/aux/cache entry) in engine code"),
+    "item-call": (
+        ".item() in engine code — a device sync on concrete values and a "
+        "TracerError under jit"),
+    "unseeded-random": (
+        "legacy global numpy RNG (np.random.<fn>) — use "
+        "np.random.default_rng(seed) / RandomState(seed) so sweeps stay "
+        "deterministic"),
+    "random-module": (
+        "the stdlib random module — unseeded, process-global, and "
+        "invisible to the scenario seed plumbing"),
+    "naked-timer": (
+        "a function that brackets work with two timer reads but never "
+        "calls block_until_ready/device_get — with async dispatch the "
+        "timer measures dispatch, not compute"),
+    "meta-subscript": (
+        'meta["..."] dict-style access where the frozen SimMeta is '
+        "required — attribute access is the supported spelling"),
+    "frozen-mutation": (
+        "attribute assignment on a consts/meta object — EngineConsts and "
+        "SimMeta are frozen; use _replace()/dataclasses.replace()"),
+    "f64-literal": (
+        "a 64-bit jnp dtype literal in engine code — the engine is f32 "
+        "end-to-end and x64 is never enabled"),
+}
+
+RULES = {**JAXPR_RULES, **AST_RULES}

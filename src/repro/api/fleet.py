@@ -176,10 +176,9 @@ def _chunk_program(meta: SimMeta, sig: Tuple[int, ...], chunk_steps: int,
             fn = jax.shard_map(counted, mesh=mesh,
                                in_specs=(P(), P("fleet"), P("fleet")),
                                out_specs=P("fleet"), check_vma=False)
-        # donating the carry lets XLA alias it through the while loop; the
-        # CPU backend has no donation support and would warn on every call
-        donate = (2,) if jax.default_backend() != "cpu" else ()
-        return jax.jit(fn, donate_argnums=donate)
+        # donating the carry lets XLA alias it through the while loop;
+        # the shared policy skips the CPU backend (jaxcheck:donation)
+        return jax.jit(fn, donate_argnums=runners.donation_argnums())
 
     return runners.get_cached_program(key, build)
 

@@ -102,13 +102,42 @@ def get_runner(meta: SimMeta, kind: str) -> Callable:
     return get_cached_program((meta, kind), lambda: _build(meta, kind))
 
 
-def _build(meta: SimMeta, kind: str) -> Callable:
+def donation_argnums(backend: str | None = None) -> Tuple[int, ...]:
+    """The donation policy shared by every jitted engine program (here and
+    ``api.fleet._chunk_program``): argument 2 — the t=0 state / chunk
+    carry — is donated so XLA aliases the init buffers straight into the
+    while-loop carry and final outputs, EXCEPT on the CPU backend, which
+    has no donation support and would warn on every call.  Audited by the
+    static analyzer (jaxcheck:donation, DESIGN.md §12)."""
+    backend = backend or jax.default_backend()
+    return () if backend == "cpu" else (2,)
+
+
+def traced_jaxpr(meta: SimMeta, kind: str, consts, pols):
+    """Static-analysis hook (DESIGN.md §12): the engine program exactly as
+    ``get_runner`` would jit it, traced to a ClosedJaxpr without
+    compiling, plus the number of trailing flat inputs that belong to the
+    donated t=0 state argument.  Neither the program cache nor the trace
+    counter is touched — ``trace_count()`` assertions stay exact."""
+    meta = SimMeta.coerce(meta)
+    if kind not in KINDS:
+        raise ValueError(f"unknown runner kind {kind!r}; one of {KINDS}")
+    fn, init = _make_fn(meta, kind, counted=False)
+    s0 = jax.eval_shape(init, consts, pols)
+    closed = jax.make_jaxpr(fn)(consts, pols, s0)
+    return closed, len(jax.tree_util.tree_leaves(s0))
+
+
+def _make_fn(meta: SimMeta, kind: str, counted: bool = True):
+    """(run_fn, init_fn) for one batch kind, before jit — shared by the
+    runner cache (``_build``) and the analysis hook (``traced_jaxpr``)."""
     base = make_packed_simulator(meta)
 
-    def counted(consts, pol, s0):
+    def counted_fn(consts, pol, s0):
         # executes at TRACE time only — the compiled program has no trace
         # of it, so the counter counts traces, not runs.
-        note_trace()
+        if counted:
+            note_trace()
         return base(consts, pol, s0)
 
     def init_one(consts, pol):
@@ -118,26 +147,28 @@ def _build(meta: SimMeta, kind: str) -> Callable:
                                       meta.ctrl_slots)
 
     if kind == "single":
-        fn, init = counted, init_one
+        fn, init = counted_fn, init_one
     elif kind == "policy_batch":
-        fn = jax.vmap(counted, in_axes=(None, 0, 0))
+        fn = jax.vmap(counted_fn, in_axes=(None, 0, 0))
         init = jax.vmap(init_one, in_axes=(None, 0))
     elif kind == "zipped":
-        fn = jax.vmap(counted)
+        fn = jax.vmap(counted_fn)
         init = jax.vmap(init_one)
     else:  # grid: scenarios outer, policies inner
         def fn(consts, pols, s0):
             return jax.vmap(lambda c, s0c: jax.vmap(
-                lambda p, s0p: counted(c, p, s0p))(pols, s0c))(consts, s0)
+                lambda p, s0p: counted_fn(c, p, s0p))(pols, s0c))(consts, s0)
 
         def init(consts, pols):
             return jax.vmap(lambda c: jax.vmap(
                 lambda p: init_one(c, p))(pols))(consts)
 
-    # donating s0 lets the loop carry / outputs alias the init buffers;
-    # the CPU backend has no donation support and would warn on every call
-    donate = (2,) if jax.default_backend() != "cpu" else ()
-    run_jit = jax.jit(fn, donate_argnums=donate)
+    return fn, init
+
+
+def _build(meta: SimMeta, kind: str) -> Callable:
+    fn, init = _make_fn(meta, kind)
+    run_jit = jax.jit(fn, donate_argnums=donation_argnums())
     init_jit = jax.jit(init)
 
     def call(consts, pols):

@@ -103,6 +103,53 @@ def test_cache_no_retrace_on_identical_meta():
     assert runners.trace_count() == traces_after_first + 1
 
 
+def test_fleet_no_retrace_on_identical_meta():
+    """Experiment.run_fleet: the chunk programs (which bump the same
+    trace counter at trace time) compile exactly once — a second
+    same-meta, same-width invocation is trace-free."""
+    runners.cache_clear()
+    setup = _tiny_setups()[0]
+    pols = [PolicyConfig(seed=i) for i in range(3)]
+
+    exp = Experiment(scenarios=setup, policies=pols)
+    r1 = exp.run_fleet(width=2, chunk_steps=8)
+    n = runners.trace_count()
+    assert n >= 1
+
+    r2 = Experiment(scenarios=setup, policies=pols).run_fleet(
+        width=2, chunk_steps=8)
+    assert runners.trace_count() == n, \
+        "second run_fleet with identical SimMeta must not retrace"
+    assert_states_identical(r1.states, r2.states)
+
+
+def test_stream_no_retrace_on_identical_meta():
+    """Experiment.run_stream: chunk/refill programs compile exactly once —
+    replaying the same arrival trace through an equal-meta ring is
+    trace-free the second time."""
+    from repro.scenarios import get_scenario
+    from repro.scenarios.arrivals import PoissonArrivals
+
+    runners.cache_clear()
+    setup = get_scenario("leaf-spine", n_jobs=2).build()
+    arrivals = PoissonArrivals(rate=0.05, seed=0)
+
+    def one_run():
+        exp = Experiment(scenarios=("leaf-spine", setup),
+                         policies=PolicyConfig(job_concurrency=2))
+        return exp.run_stream(arrivals, horizon=120.0, slots=4,
+                              chunk_steps=32)
+
+    r1 = one_run()
+    n = runners.trace_count()
+    assert n >= 1
+
+    r2 = one_run()
+    assert runners.trace_count() == n, \
+        "second run_stream with identical SimMeta must not retrace"
+    assert r1.jobs[0]["seq"].size == r2.jobs[0]["seq"].size
+
+
 def test_cache_shared_by_shims():
     """simulate() reuses the same cache — repeated calls are trace-free."""
     runners.cache_clear()

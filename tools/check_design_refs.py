@@ -7,6 +7,12 @@ src/, benchmarks/, examples/, tools/ or tests/; a section resolves if some
 markdown heading line in DESIGN.md contains ``§<token>`` not immediately
 followed by more token characters (so §2 does not match a §20 heading).
 Bare ``DESIGN.md`` mentions only require the file to exist.
+
+Static-analyzer rule references resolve the same way: a ``jaxcheck:<id>``
+token in source (e.g. ``jaxcheck:sort-in-loop``) resolves iff DESIGN.md's
+rule catalog (§12) documents that exact token.  Suppression comments
+(``# jaxcheck: disable=...``, with a space after the colon) are not
+references and are skipped.
 """
 from __future__ import annotations
 
@@ -15,6 +21,7 @@ import sys
 from pathlib import Path
 
 REF_RE = re.compile(r"DESIGN\.md\s*§([A-Za-z0-9.-]+)")
+RULE_RE = re.compile(r"jaxcheck:([a-z][a-z0-9-]*)")
 SCAN_DIRS = ("src", "benchmarks", "examples", "tools", "tests")
 
 
@@ -41,6 +48,22 @@ def heading_sections(design_md: Path):
     return tokens
 
 
+def collect_rule_refs(root: Path):
+    """-> list of (file, lineno, rule_id) for ``jaxcheck:<id>`` tokens."""
+    refs = []
+    for d in SCAN_DIRS:
+        for py in sorted((root / d).rglob("*.py")):
+            for i, line in enumerate(py.read_text().splitlines(), 1):
+                for m in RULE_RE.finditer(line):
+                    refs.append((py.relative_to(root), i, m.group(1)))
+    return refs
+
+
+def documented_rules(design_md: Path):
+    """-> set of rule ids DESIGN.md documents as ``jaxcheck:<id>``."""
+    return set(RULE_RE.findall(design_md.read_text()))
+
+
 def check(root: Path) -> list[str]:
     """-> list of error strings (empty = all references resolve)."""
     design = root / "DESIGN.md"
@@ -53,6 +76,12 @@ def check(root: Path) -> list[str]:
         if token not in sections:
             errors.append(f"{f}:{line}: DESIGN.md §{token} has no matching "
                           f"heading (have: {sorted(sections)})")
+    rules = documented_rules(design)
+    for f, line, rule in collect_rule_refs(root):
+        if rule not in rules:
+            errors.append(f"{f}:{line}: jaxcheck:{rule} is not documented "
+                          f"in DESIGN.md's rule catalog "
+                          f"(have: {sorted(rules)})")
     return errors
 
 
@@ -63,9 +92,11 @@ def main() -> int:
     if errors:
         print("\n".join(errors))
         return 1
+    rule_refs = collect_rule_refs(root)
     print(f"ok: {len(refs)} DESIGN.md § reference(s) across "
           f"{len({f for f, _, _ in refs})} file(s) all resolve "
-          f"({len(heading_sections(root / 'DESIGN.md'))} sections declared)")
+          f"({len(heading_sections(root / 'DESIGN.md'))} sections declared); "
+          f"{len(rule_refs)} jaxcheck:<rule> reference(s) documented")
     return 0
 
 
