@@ -5,8 +5,8 @@ use-case figures, the system benches, and ALL the BENCH_*.json sweep
 reports (scenario, failure, control-plane, fleet, engine profile,
 streaming).  ``--full`` runs each sweep at its committed-baseline grid —
 that is the pass that refreshes the perf-gate baselines
-(``BENCH_engine.json`` / ``BENCH_fleet.json`` / ``BENCH_stream.json``,
-whose CI gates re-run the same default grids); the default quick pass
+(``BENCH_engine.json`` / ``BENCH_fleet.json`` / ``BENCH_stream.json`` /
+``BENCH_chaos.json``, whose CI gates re-run the same default grids); the default quick pass
 uses the reduced CI grids and writes the gated benches to the
 ``*.ci.json`` artifact names, so a smoke run never clobbers a committed
 baseline with a mismatched grid.
@@ -33,14 +33,14 @@ def main(argv=None):  # jaxcheck: disable=naked-timer
     results = {}
     t_all = time.time()
 
-    from . import (advisor_validation, ctrl_sweep, engine_profile,
-                   failure_sweep, fig11_13_usecase, fleet_sweep,
-                   roofline_table, scenario_sweep, sim_throughput,
-                   stream_sweep)
+    from . import (advisor_validation, chaos_sweep, ctrl_sweep,
+                   engine_profile, failure_sweep, fig11_13_usecase,
+                   fleet_sweep, roofline_table, scenario_sweep,
+                   sim_throughput, stream_sweep)
 
     def banner(step, title):
         print("=" * 72)
-        print(f"[{step}/10] {title}")
+        print(f"[{step}/11] {title}")
         print("=" * 72)
 
     banner(1, "paper use-case (Figs. 11a/11b/12/13) — SDN vs legacy")
@@ -98,6 +98,11 @@ def main(argv=None):  # jaxcheck: disable=naked-timer
     stream_sweep.main(
         (["--horizon", "400"] if quick else [])
         + ["--json", f"experiments/BENCH_stream{suffix}"])
+
+    banner(11, "chaos sweep (degradation severity x speculation grid)")
+    chaos_sweep.main(
+        (["--severities", "0.2", "0.4", "--seeds", "1"] if quick else [])
+        + ["--json", f"experiments/BENCH_chaos{suffix}"])
 
     print("=" * 72)
     ok = results["fig11_13"]["qualitative_claim_reproduced"]

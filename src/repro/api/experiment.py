@@ -27,7 +27,7 @@ import jax.numpy as jnp
 from ..core import policies as policy_mod
 from ..core.ctrlplane import CtrlPlaneConfig
 from ..core.engine import make_consts
-from ..core.failures import FailureSchedule
+from ..core.failures import DegradationSchedule, FailureSchedule
 from ..core.mapreduce import SimSetup
 from ..core.policies import as_policy_arrays, policy_fields
 from .results import Results
@@ -176,26 +176,38 @@ class Experiment:
         scenario is replicated per config — the install-latency axis of
         ``benchmarks/ctrl_sweep.py``.  Composes with ``failures`` (the
         cross is failures × ctrl per scenario).
+    degradation:
+        Optional gray-failure schedules (DESIGN.md §13).  One or a
+        sequence of: a ``DegradationSchedule``, a callable
+        ``(SimSetup) -> DegradationSchedule`` (e.g.
+        ``scenarios.failures.degradation_injector``), or a ``(name,
+        either)`` pair.  Each scenario is replicated per schedule —
+        the severity axis of ``benchmarks/chaos_sweep.py``.  Composes
+        with ``failures`` and ``ctrl``.
     """
 
     def __init__(self, scenarios: Any, policies: Any = None,
                  seeds: Optional[Sequence[int]] = None,
-                 failures: Any = None, ctrl: Any = None):
+                 failures: Any = None, ctrl: Any = None,
+                 degradation: Any = None):
         # consts are cacheable across Experiments only when every scenario
         # is a bare registry name (deterministic rebuild) and no failure /
-        # ctrl cross mutates the setups afterwards
+        # ctrl / degradation cross mutates the setups afterwards
         items = (list(scenarios)
                  if isinstance(scenarios, (list, tuple))
                  and not _is_pair(scenarios, in_sequence=False)
                  else [scenarios])
         self._consts_key = (tuple(items)
                             if failures is None and ctrl is None
+                            and degradation is None
                             and all(isinstance(i, str) for i in items)
                             else None)
         self.scenarios: List[Tuple[str, SimSetup]] = _normalize(
             scenarios, _build_scenario, "scenario")
         if failures is not None:
             self.scenarios = _cross_failures(self.scenarios, failures)
+        if degradation is not None:
+            self.scenarios = _cross_degradation(self.scenarios, degradation)
         if ctrl is not None:
             self.scenarios = _cross_ctrl(self.scenarios, ctrl)
         pols = _normalize(
@@ -335,6 +347,38 @@ def _cross_failures(scenarios: List[Tuple[str, SimSetup]],
             sched.validate(topo.n_hosts, topo.n_links)
             name = f"{sname}/{fname}" if len(named) > 1 else sname
             out.append((name, dataclasses.replace(setup, failures=sched)))
+    return out
+
+
+def _cross_degradation(scenarios: List[Tuple[str, SimSetup]],
+                       degradation: Any) -> List[Tuple[str, SimSetup]]:
+    """Replicate every scenario per degradation schedule (names suffixed
+    with the schedule label when there is more than one) — mirrors
+    ``_cross_failures`` for the DESIGN.md §13 gray-failure axis."""
+    if isinstance(degradation, DegradationSchedule) \
+            or callable(degradation) \
+            or _is_pair(degradation, in_sequence=False):
+        degradation = [degradation]
+    named = []
+    for di, item in enumerate(degradation):
+        if _is_pair(item, in_sequence=True):
+            dname, spec = item
+        else:
+            dname, spec = f"d{di}", item
+        named.append((dname, spec))
+    out = []
+    for sname, setup in scenarios:
+        for dname, spec in named:
+            sched = spec(setup) if callable(spec) else spec
+            if not isinstance(sched, DegradationSchedule):
+                raise TypeError(
+                    f"cannot interpret {type(sched).__name__} as a "
+                    "DegradationSchedule")
+            topo = setup.cluster.topo
+            sched.validate(topo.n_hosts, topo.n_links)
+            name = f"{sname}/{dname}" if len(named) > 1 else sname
+            out.append((name, dataclasses.replace(setup,
+                                                  degradation=sched)))
     return out
 
 

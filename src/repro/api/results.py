@@ -106,7 +106,10 @@ class Results:
         DESIGN.md §7; all zero without a failure schedule) plus the
         control-plane totals (flow-rule installs/evictions/reinstalls,
         packet install wait, controller queueing, VM migrations —
-        DESIGN.md §10; all zero without a ctrl config)."""
+        DESIGN.md §10; all zero without a ctrl config) plus the chaos
+        totals (speculative clone launches/wins/wasted work, degraded
+        wall-clock, controller failovers and parked request time —
+        DESIGN.md §13; all zero when those features are off)."""
         jr = self.job_report()
         er = self.energy_report()
         stalled = np.asarray(self.states.stalled)
@@ -116,6 +119,12 @@ class Results:
         reinstalls = np.asarray(self.states.ctrl_reinstalls)
         queue_wait = np.asarray(self.states.ctrl_queue_wait)
         migrations = np.asarray(self.states.vm_migrations).sum(axis=-1)
+        spec_launches = np.asarray(self.states.spec_launches)
+        spec_wins = np.asarray(self.states.spec_wins)
+        spec_wasted = np.asarray(self.states.spec_wasted)
+        degraded = np.asarray(self.states.degraded_time)
+        failovers = np.asarray(self.states.ctrl_failovers)
+        failover_park = np.asarray(self.states.ctrl_failover_park)
         out = []
         for si, sn in enumerate(self.scenario_names):
             for pi, pn in enumerate(self.policy_names):
@@ -143,5 +152,11 @@ class Results:
                     "rule_reinstalls": int(reinstalls[si, pi]),
                     "ctrl_queue_wait_s": float(queue_wait[si, pi]),
                     "vm_migrations": int(migrations[si, pi]),
+                    "spec_launches": int(spec_launches[si, pi]),
+                    "spec_wins": int(spec_wins[si, pi]),
+                    "wasted_spec_work_s": float(spec_wasted[si, pi]),
+                    "degraded_time_s": float(degraded[si, pi]),
+                    "failover_count": int(failovers[si, pi]),
+                    "failover_park_s": float(failover_park[si, pi]),
                 })
         return out

@@ -144,7 +144,7 @@ def _make_fn(meta: SimMeta, kind: str, counted: bool = True):
         del pol  # the t=0 state depends on consts only; pol carries the
         #          batch axes the vmapped variants map over
         return init_state_from_consts(consts, meta.n_switches,
-                                      meta.ctrl_slots)
+                                      meta.ctrl_slots, meta.spec_slots)
 
     if kind == "single":
         fn, init = counted_fn, init_one

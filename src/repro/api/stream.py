@@ -76,6 +76,11 @@ class StreamResults:
     stats: StreamStats
     final_states: Optional[Dict[int, Any]] = None
     final_consts: Optional[Dict[int, Any]] = None
+    # per-policy cumulative chaos counters at drain (DESIGN.md §13):
+    # spec_launches / spec_wins / wasted_spec_work_s / degraded_time_s /
+    # failover_count / failover_park_s — zero when those features are off
+    chaos: Dict[int, Dict[str, float]] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def n_policies(self) -> int:
@@ -157,6 +162,7 @@ class StreamResults:
                                if soj.size else float("nan")),
             "energy_j": float(smp[-1, 1] + smp[-1, 2]),
             "classes": per_class,
+            **self.chaos.get(policy, {}),
         }
 
     def rows(self) -> List[Dict[str, Any]]:
@@ -239,7 +245,9 @@ def run_stream(exp, arrivals, horizon: float, *, warmup: float = 0.0,
 
     rs = ring_setup([a.job for a in trace[:spec.slots]], setup0.cluster,
                     spec, route_table=setup0.route_table,
-                    failures=setup0.failures, ctrl=setup0.ctrl)
+                    failures=setup0.failures, ctrl=setup0.ctrl,
+                    degradation=setup0.degradation,
+                    spec_slots=setup0.spec_slots)
     consts0, meta = make_consts(rs)
     meta = SimMeta.coerce(meta)
 
@@ -264,6 +272,7 @@ def run_stream(exp, arrivals, horizon: float, *, warmup: float = 0.0,
                                        for pi in range(P)}
     finals: Dict[int, Any] = {}
     finals_c: Dict[int, Any] = {}
+    chaos: Dict[int, Dict[str, float]] = {}
 
     for sig, members in groups.items():
         W = len(members)
@@ -353,6 +362,19 @@ def run_stream(exp, arrivals, horizon: float, *, warmup: float = 0.0,
                 carry = refill(consts_dev, carry, jnp.asarray(job_m),
                                jnp.asarray(task_m), jnp.asarray(pkt_m),
                                jnp.asarray(lane_m))
+        fs = carry[0]
+        (c_sl, c_sw, c_ww, c_dg, c_fo, c_fp) = jax.device_get(
+            (fs.spec_launches, fs.spec_wins, fs.spec_wasted,
+             fs.degraded_time, fs.ctrl_failovers, fs.ctrl_failover_park))
+        for li in range(W):
+            chaos[sched.lane[li]] = {
+                "spec_launches": int(c_sl[li]),
+                "spec_wins": int(c_sw[li]),
+                "wasted_spec_work_s": float(c_ww[li]),
+                "degraded_time_s": float(c_dg[li]),
+                "failover_count": int(c_fo[li]),
+                "failover_park_s": float(c_fp[li]),
+            }
         if return_states:
             host_state = [np.asarray(leaf) for leaf in carry[0]]
             for li in range(W):
@@ -380,4 +402,4 @@ def run_stream(exp, arrivals, horizon: float, *, warmup: float = 0.0,
         window_s=float(window), meta=meta, jobs=jobs,
         samples={pi: np.asarray(v, float) for pi, v in samples.items()},
         stats=stats, final_states=finals if return_states else None,
-        final_consts=finals_c if return_states else None)
+        final_consts=finals_c if return_states else None, chaos=chaos)

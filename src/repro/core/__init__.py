@@ -3,14 +3,17 @@ from .ctrlplane import CtrlPlaneConfig, no_ctrl
 from .energy import EnergyParams
 from .engine import (SimState, make_packed_simulator, make_simulator,
                      simulate, simulate_batch, simulate_scenarios)
-from .failures import FailureSchedule, host_crash, link_cut, no_failures
+from .failures import (DegradationSchedule, FailureSchedule, host_crash,
+                       host_slowdown, link_brownout, link_cut,
+                       no_degradation, no_failures)
 from .mapreduce import ClusterSpec, JobSpec, SimSetup, build_setup
 from .policies import (INSTALL_PROACTIVE, INSTALL_REACTIVE,
                        JOBSEL_FCFS, JOBSEL_PRIORITY, JOBSEL_SJF,
                        MIG_CONGESTION, MIG_STATIC,
                        PLACE_LEAST_USED, PLACE_RANDOM, PLACE_ROUND_ROBIN,
                        RECOVERY_RESTART, RECOVERY_RESUME,
-                       ROUTE_LEGACY, ROUTE_SDN, TRAFFIC_FAIRSHARE,
+                       ROUTE_LEGACY, ROUTE_SDN, SPEC_OFF, SPEC_ON,
+                       TRAFFIC_FAIRSHARE,
                        TRAFFIC_WATERFILL, PolicyConfig, PolicyField,
                        as_policy_arrays, policy_field_names, policy_fields,
                        register_policy_field)
@@ -28,12 +31,15 @@ __all__ = [
     "PolicyField", "SimMeta", "as_policy_arrays", "policy_field_names",
     "policy_fields", "register_policy_field",
     "FailureSchedule", "host_crash", "link_cut", "no_failures",
+    "DegradationSchedule", "host_slowdown", "link_brownout",
+    "no_degradation",
     "CtrlPlaneConfig", "no_ctrl",
     "ROUTE_LEGACY", "ROUTE_SDN", "TRAFFIC_FAIRSHARE", "TRAFFIC_WATERFILL",
     "PLACE_LEAST_USED", "PLACE_ROUND_ROBIN", "PLACE_RANDOM",
     "JOBSEL_FCFS", "JOBSEL_SJF", "JOBSEL_PRIORITY",
     "RECOVERY_RESTART", "RECOVERY_RESUME",
     "INSTALL_REACTIVE", "INSTALL_PROACTIVE", "MIG_STATIC", "MIG_CONGESTION",
+    "SPEC_OFF", "SPEC_ON",
     "energy_report", "job_report", "summarize",
     "RouteTable", "build_route_table",
     "GBPS", "Topology", "canonical_tree", "fat_tree", "leaf_spine",

@@ -52,6 +52,20 @@ class CtrlPlaneConfig:
     mig_cost: float = 0.0          # s of compute pause per migration
     mig_cooldown: float = 0.0      # s after a migration before the next
     mig_limit: int = 8             # total migrations per run (step bound)
+    # controller failover (DESIGN.md §13): the PRIMARY controller is down
+    # on [ctrl_fail_t, ctrl_recover_t).  SDN rule requests arriving inside
+    # the first ``failover_delay`` seconds of the outage PARK until the
+    # backup finishes taking over (leader election + state sync); after
+    # that the backup serves with its own rate/latency until the primary
+    # recovers.  ``inf`` fail_t = failover can never happen (the default
+    # config is unchanged).  Legacy routing never consults the controller,
+    # so it rides through the outage untouched — the Kreutz et al.
+    # availability asymmetry in one knob.
+    ctrl_fail_t: float = INF       # s: primary outage start (inf = never)
+    ctrl_recover_t: float = INF    # s: primary back (inf = down for good)
+    failover_delay: float = 0.0    # s: leader-election gap, requests park
+    backup_rate: float = INF       # backup rule installs per second
+    backup_latency: float = 0.0    # backup flow-mod latency (s)
 
     @property
     def any_ctrl(self) -> bool:
@@ -63,7 +77,8 @@ class CtrlPlaneConfig:
         return bool(self.install_latency > 0.0
                     or np.isfinite(self.ctrl_rate)
                     or self.table_slots > 0
-                    or np.isfinite(self.mig_threshold))
+                    or np.isfinite(self.mig_threshold)
+                    or np.isfinite(self.ctrl_fail_t))
 
     def validate(self) -> "CtrlPlaneConfig":
         checks = (
@@ -74,6 +89,17 @@ class CtrlPlaneConfig:
             (self.mig_cost >= 0.0, "mig_cost must be >= 0"),
             (self.mig_cooldown >= 0.0, "mig_cooldown must be >= 0"),
             (self.mig_limit >= 0, "mig_limit must be >= 0"),
+            (self.ctrl_fail_t >= 0.0, "ctrl_fail_t must be >= 0"),
+            (not np.isfinite(self.ctrl_fail_t)
+             or self.ctrl_recover_t > self.ctrl_fail_t,
+             "ctrl_recover_t must be > ctrl_fail_t (zero/negative-length "
+             "controller outage window)"),
+            (np.isfinite(self.ctrl_fail_t)
+             or not np.isfinite(self.ctrl_recover_t),
+             "finite ctrl_recover_t without a finite ctrl_fail_t"),
+            (self.failover_delay >= 0.0, "failover_delay must be >= 0"),
+            (self.backup_rate > 0.0, "backup_rate must be > 0"),
+            (self.backup_latency >= 0.0, "backup_latency must be >= 0"),
         )
         for ok, msg in checks:
             if not ok:

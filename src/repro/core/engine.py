@@ -42,12 +42,12 @@ import numpy as np
 
 from . import fairshare
 from .ctrlplane import no_ctrl
-from .failures import no_failures
+from .failures import no_degradation, no_failures
 from .mapreduce import ACTIVE, DONE, INSTALLING, SimSetup, VOID, WAITING
 from .energy import host_power, switch_power
 from .policies import (INSTALL_PROACTIVE, JOBSEL_PRIORITY, JOBSEL_SJF,
                        MIG_CONGESTION, PLACE_RANDOM, PLACE_ROUND_ROBIN,
-                       RECOVERY_RESTART, as_policy_arrays)
+                       RECOVERY_RESTART, SPEC_ON, as_policy_arrays)
 from .routing import (ROUTE_SDN, flow_hash_u32, legacy_route_choice,
                       sdn_route_choice)
 from .simmeta import SimMeta
@@ -159,6 +159,20 @@ class EngineConsts(NamedTuple):
     # the same instants concatenated ([2*n_hosts + 2*n_links], inf=never):
     # the dt horizon mins over ONE tensor per step (DESIGN.md §8)
     fail_breaks: jnp.ndarray
+    # gray-failure degradation schedule (DESIGN.md §13): a host runs at
+    # host_deg_factor x MIPS on [host_slow_t, host_restore_t), a directed
+    # link at link_deg_factor x bandwidth on its window — piecewise-
+    # constant multipliers joining the same analytic dt min as the outage
+    # tensors above.  inf slow_t / factor 1.0 = never.
+    host_slow_t: jnp.ndarray     # f32 [n_hosts]
+    host_restore_t: jnp.ndarray  # f32 [n_hosts]
+    host_deg_factor: jnp.ndarray # f32 [n_hosts]
+    link_slow_t: jnp.ndarray     # f32 [n_links]
+    link_restore_t: jnp.ndarray  # f32 [n_links]
+    link_deg_factor: jnp.ndarray # f32 [n_links]
+    # live-window slow/restore instants concatenated (inert windows masked
+    # to inf) — one masked min per step, mirroring fail_breaks
+    deg_breaks: jnp.ndarray      # f32 [2*n_hosts + 2*n_links]
     # control plane (DESIGN.md §10): scalar resource parameters — the
     # identity values (0 latency, inf rate, inf threshold) when the replica
     # carries no CtrlPlaneConfig, so a packed sweep can mix configs.
@@ -176,6 +190,16 @@ class EngineConsts(NamedTuple):
     # policy's distance estimate; 0 on the diagonal, UNREACHABLE_HOPS where
     # no route exists
     pair_hops: jnp.ndarray      # i32 [n_nodes^2]
+    # controller failover (DESIGN.md §13): the primary controller is down
+    # on [ctrl_fail_t, ctrl_recover_t); rule requests inside the first
+    # ctrl_failover_delay seconds of the outage park until the backup's
+    # leader election completes, then the backup serves at its own
+    # rate/latency.  inf fail_t = never (the scalars are inert).
+    ctrl_fail_t: jnp.ndarray         # f32 []
+    ctrl_recover_t: jnp.ndarray      # f32 []
+    ctrl_failover_delay: jnp.ndarray # f32 []
+    ctrl_backup_rate: jnp.ndarray    # f32 []
+    ctrl_backup_latency: jnp.ndarray # f32 []
 
 
 class SimState(NamedTuple):
@@ -233,6 +257,23 @@ class SimState(NamedTuple):
     pkt_install_wait: jnp.ndarray  # f32 [n_packets]: summed install stall
     vm_mig_until: jnp.ndarray   # f32 [n_vms]: migration compute-pause end
     vm_migrations: jnp.ndarray  # i32 [n_vms]: re-homings taken
+    # gray failures, speculation & failover (DESIGN.md §13).  The spec_*
+    # tensors are the statically pre-allocated per-job clone slots
+    # ([n_jobs * SimMeta.spec_slots], zero-length when speculation is
+    # structurally off); everything passes through untouched when the
+    # corresponding meta switch is off.
+    degraded_time: jnp.ndarray  # f32 []: time with any live deg window
+    spec_of: jnp.ndarray        # i32 [S]: cloned original task (-1 free)
+    spec_vm: jnp.ndarray        # i32 [S]: VM the clone runs on
+    spec_rem: jnp.ndarray       # f32 [S]: clone's remaining MI
+    spec_start: jnp.ndarray     # f32 [S]: clone launch instant
+    task_cloned: jnp.ndarray    # bool [n_tasks]: ever speculated (once)
+    spec_launches: jnp.ndarray  # i32 []: clones launched
+    spec_wins: jnp.ndarray      # i32 []: clones that beat their original
+    spec_wasted: jnp.ndarray    # f32 []: losing-copy runtime (VM-seconds)
+    ctrl_failovers: jnp.ndarray # i32 []: primary-controller outages hit
+    ctrl_failover_park: jnp.ndarray  # f32 []: install delay added by the
+    #                             leader-election gap (summed)
 
 
 def default_max_steps(setup: SimSetup) -> int:
@@ -248,6 +289,18 @@ def default_max_steps(setup: SimSetup) -> int:
     quantize = False
     if sched is not None and sched.any_failures:
         steps = base * (1 + sched.n_events) + 2 * sched.n_events
+        quantize = True
+    deg = setup.degradation
+    if deg is not None and deg.any_degradation:
+        # a degradation window reverts nothing — it only adds its
+        # slow/restore breakpoints as extra event steps (DESIGN.md §13)
+        steps = steps + 4 * deg.n_events + 8
+        quantize = True
+    if setup.spec_slots > 0:
+        # each task is cloned at most once: one clone finish breakpoint
+        # plus one cleanup-visible cancellation step per task bounds the
+        # speculation event budget (DESIGN.md §13)
+        steps = steps + 2 * setup.n_tasks
         quantize = True
     cfg = setup.ctrl
     if cfg is not None and cfg.any_ctrl:
@@ -285,6 +338,11 @@ def make_consts(setup: SimSetup) -> tuple[EngineConsts, SimMeta]:
         sched = no_failures(cl.topo.n_hosts, cl.topo.n_links)
     else:
         sched.validate(cl.topo.n_hosts, cl.topo.n_links)
+    deg = setup.degradation
+    if deg is None:
+        deg = no_degradation(cl.topo.n_hosts, cl.topo.n_links)
+    else:
+        deg.validate(cl.topo.n_hosts, cl.topo.n_links)
     cfg = (setup.ctrl or no_ctrl()).validate()
     consts = EngineConsts(
         routes=jnp.asarray(rt.routes),
@@ -326,6 +384,13 @@ def make_consts(setup: SimSetup) -> tuple[EngineConsts, SimMeta]:
         link_fail_t=jnp.asarray(sched.link_fail_t, jnp.float32),
         link_recover_t=jnp.asarray(sched.link_recover_t, jnp.float32),
         fail_breaks=jnp.asarray(sched.instants(), jnp.float32),
+        host_slow_t=jnp.asarray(deg.host_slow_t, jnp.float32),
+        host_restore_t=jnp.asarray(deg.host_restore_t, jnp.float32),
+        host_deg_factor=jnp.asarray(deg.host_factor, jnp.float32),
+        link_slow_t=jnp.asarray(deg.link_slow_t, jnp.float32),
+        link_restore_t=jnp.asarray(deg.link_restore_t, jnp.float32),
+        link_deg_factor=jnp.asarray(deg.link_factor, jnp.float32),
+        deg_breaks=jnp.asarray(deg.instants(), jnp.float32),
         ctrl_on=jnp.asarray(cfg.any_ctrl),
         ctrl_latency=jnp.asarray(cfg.install_latency, jnp.float32),
         ctrl_rate=jnp.asarray(cfg.ctrl_rate, jnp.float32),
@@ -335,6 +400,11 @@ def make_consts(setup: SimSetup) -> tuple[EngineConsts, SimMeta]:
         mig_limit=jnp.asarray(cfg.mig_limit, jnp.int32),
         pair_hops=jnp.asarray(pair_hops_np(rt.route_len, rt.n_cand,
                                            cl.topo.n_nodes)),
+        ctrl_fail_t=jnp.asarray(cfg.ctrl_fail_t, jnp.float32),
+        ctrl_recover_t=jnp.asarray(cfg.ctrl_recover_t, jnp.float32),
+        ctrl_failover_delay=jnp.asarray(cfg.failover_delay, jnp.float32),
+        ctrl_backup_rate=jnp.asarray(cfg.backup_rate, jnp.float32),
+        ctrl_backup_latency=jnp.asarray(cfg.backup_latency, jnp.float32),
     )
     meta = SimMeta(
         n_nodes=cl.topo.n_nodes,
@@ -348,12 +418,15 @@ def make_consts(setup: SimSetup) -> tuple[EngineConsts, SimMeta]:
         has_failures=sched.any_failures,
         has_ctrl=cfg.any_ctrl,
         ctrl_slots=cfg.table_slots if cfg.any_ctrl else 0,
+        has_degradation=deg.any_degradation,
+        spec_slots=setup.spec_slots,
     )
     return consts, meta
 
 
 def init_state_from_consts(c: EngineConsts, n_switches: int,
-                           ctrl_slots: int = 0) -> SimState:
+                           ctrl_slots: int = 0,
+                           spec_slots: int = 0) -> SimState:
     """t=0 state derived purely from (possibly padded) const tensors.
 
     ``n_switches`` is the STATIC switch-tensor length (padded max in a
@@ -362,10 +435,14 @@ def init_state_from_consts(c: EngineConsts, n_switches: int,
     inert for the whole run (DESIGN.md §5).  ``ctrl_slots`` is the static
     per-switch flow-table width (``SimMeta.ctrl_slots``) — 0 gives the
     flow-table tensors a zero-length slot axis (DESIGN.md §10).
+    ``spec_slots`` is the static per-job speculative-clone slot count
+    (``SimMeta.spec_slots``) — 0 gives the clone tensors a zero-length
+    axis (DESIGN.md §13).
     """
     n_j = c.job_release.shape[0]
     n_t = c.task_job.shape[0]
     n_p = c.pkt_job.shape[0]
+    n_s = n_j * spec_slots
     f = jnp.float32
     return SimState(
         time=f(0.0), steps=jnp.int32(0), stalled=jnp.asarray(False),
@@ -409,12 +486,24 @@ def init_state_from_consts(c: EngineConsts, n_switches: int,
         pkt_install_wait=jnp.zeros(n_p, f),
         vm_mig_until=jnp.zeros(c.vm_host.shape[0], f),
         vm_migrations=jnp.zeros(c.vm_host.shape[0], jnp.int32),
+        degraded_time=f(0.0),
+        spec_of=jnp.full(n_s, -1, jnp.int32),
+        spec_vm=jnp.full(n_s, -1, jnp.int32),
+        spec_rem=jnp.zeros(n_s, f),
+        spec_start=jnp.zeros(n_s, f),
+        task_cloned=jnp.zeros(n_t, bool),
+        spec_launches=jnp.int32(0),
+        spec_wins=jnp.int32(0),
+        spec_wasted=f(0.0),
+        ctrl_failovers=jnp.int32(0),
+        ctrl_failover_park=f(0.0),
     )
 
 
 def init_state(setup: SimSetup) -> SimState:
     consts, meta = make_consts(setup)
-    return init_state_from_consts(consts, meta.n_switches, meta.ctrl_slots)
+    return init_state_from_consts(consts, meta.n_switches, meta.ctrl_slots,
+                                  meta.spec_slots)
 
 
 # ---------------------------------------------------------------------------
@@ -423,11 +512,38 @@ def init_state(setup: SimSetup) -> SimState:
 
 
 def _effective_link_bw(c: EngineConsts, meta, s: SimState) -> jnp.ndarray:
-    """Per-link capacity with dead links at 0 (DESIGN.md §7).  Without
-    failures this IS ``c.link_bw`` — the no-failure trace is unchanged."""
+    """Per-link capacity with gray-degradation windows applied (DESIGN.md
+    §13) and dead links at 0 (DESIGN.md §7).  Without degradation and
+    failures this IS ``c.link_bw`` — the off-switch trace is unchanged.
+    SDN's bottleneck route choice reads this tensor, so it steers around
+    degraded links exactly like dead ones; the legacy static hash is
+    degradation-blind."""
+    bw = c.link_bw
+    if meta.has_degradation:
+        slow = (c.link_slow_t <= s.time) & (s.time < c.link_restore_t)
+        bw = jnp.where(slow, bw * c.link_deg_factor, bw)
     if meta.has_failures:
-        return jnp.where(s.link_dead, 0.0, c.link_bw)
-    return c.link_bw
+        bw = jnp.where(s.link_dead, 0.0, bw)
+    return bw
+
+
+def _host_deg_factor(c: EngineConsts, s: SimState) -> jnp.ndarray:
+    """Per-host MIPS multiplier from the gray-degradation windows
+    (DESIGN.md §13): ``host_deg_factor`` inside ``[slow_t, restore_t)``,
+    1.0 outside.  Only traced when ``meta.has_degradation``."""
+    slow = (c.host_slow_t <= s.time) & (s.time < c.host_restore_t)
+    return jnp.where(slow, c.host_deg_factor, jnp.float32(1.0))
+
+
+def _effective_host_mips(c: EngineConsts, meta, s: SimState) -> jnp.ndarray:
+    """Per-host MIPS capacity with gray-degradation windows applied
+    (DESIGN.md §13) — the compute-side twin of ``_effective_link_bw``.
+    Feeds the energy utilization denominator: a saturated degraded host
+    draws full power for less work (the gray-failure energy story).
+    Without degradation this IS ``c.host_total_mips``."""
+    if meta.has_degradation:
+        return c.host_total_mips * _host_deg_factor(c, s)
+    return c.host_total_mips
 
 
 def _vm_host(c: EngineConsts, meta, s: SimState) -> jnp.ndarray:
@@ -997,9 +1113,19 @@ def _ctrl_request(c: EngineConsts, meta, pair, links, active_req,
     the least-recently-stamped one (LRU); displacing a live entry counts
     an eviction.  With ``ctrl_slots == 0`` (no caching) every install is
     evicted immediately, so ``occupied == installs - evictions`` holds for
-    every config (the conservation law, tests/test_fairshare.py)."""
+    every config (the conservation law, tests/test_fairshare.py).
+
+    Controller failover (DESIGN.md §13): the primary is down on
+    ``[ctrl_fail_t, ctrl_recover_t)``.  During the leader-election gap
+    (the first ``ctrl_failover_delay`` seconds of the outage) install
+    requests PARK — their service begin is pushed to the gap end and the
+    parked seconds accumulate in the tbl's ``park`` slot; after the gap
+    the backup serves with its own rate/latency until the primary
+    recovers.  With ``ctrl_fail_t == inf`` every ``where`` below picks
+    the primary branch, so pre-failover configs are numerically
+    untouched."""
     (fpair, fready, fstamp, busy, stamp, installs, evicts, reinst,
-     qwait) = tbl
+     qwait, park) = tbl
     T = meta.ctrl_slots
     nodes = c.link_src[jnp.maximum(links, 0)]
     # switch node ids sit at [n_hosts, n_hosts + n_switches) — the PADDED
@@ -1018,13 +1144,22 @@ def _ctrl_request(c: EngineConsts, meta, pair, links, active_req,
     miss = is_sw & ~hit
     m = jnp.sum(miss.astype(jnp.int32))
     begin = jnp.maximum(t, busy)
-    svc = m.astype(jnp.float32) / c.ctrl_rate            # inf rate -> 0
+    # failover: inside the primary outage the backup's rate/latency apply,
+    # and requests landing in the leader-election gap park until it ends
+    down = (t >= c.ctrl_fail_t) & (t < c.ctrl_recover_t)
+    gap_end = jnp.minimum(c.ctrl_fail_t + c.ctrl_failover_delay,
+                          c.ctrl_recover_t)
+    rate = jnp.where(down, c.ctrl_backup_rate, c.ctrl_rate)
+    lat = jnp.where(down, c.ctrl_backup_latency, c.ctrl_latency)
+    begin2 = jnp.where(down, jnp.maximum(begin, gap_end), begin)
+    svc = m.astype(jnp.float32) / rate                   # inf rate -> 0
     ready = jnp.maximum(jnp.maximum(
-        jnp.where(m > 0, begin + svc + c.ctrl_latency, -_INF),
+        jnp.where(m > 0, begin2 + svc + lat, -_INF),
         hit_ready), t)
     do_install = active_req & (m > 0)
-    busy = jnp.where(do_install, begin + svc, busy)
+    busy = jnp.where(do_install, begin2 + svc, busy)
     qwait = qwait + jnp.where(do_install, begin - t, 0.0)
+    park = park + jnp.where(do_install, begin2 - begin, 0.0)
     installs = installs + jnp.where(active_req, m, 0)
     reinst = reinst + jnp.where(active_req & pre_routed, m, 0)
     if T > 0:
@@ -1057,23 +1192,23 @@ def _ctrl_request(c: EngineConsts, meta, pair, links, active_req,
         # displaced immediately — the conservation law stays exact
         evicts = evicts + jnp.where(do_install, m, 0)
     return ready, (fpair, fready, fstamp, busy, stamp, installs, evicts,
-                   reinst, qwait)
+                   reinst, qwait, park)
 
 
 def _ctrl_tbl(s: SimState):
     return (s.ftab_pair, s.ftab_ready, s.ftab_stamp, s.ctrl_busy,
             s.ctrl_stamp, s.ctrl_installs, s.ctrl_evictions,
-            s.ctrl_reinstalls, s.ctrl_queue_wait)
+            s.ctrl_reinstalls, s.ctrl_queue_wait, s.ctrl_failover_park)
 
 
 def _with_ctrl_tbl(s: SimState, tbl) -> SimState:
     (fpair, fready, fstamp, busy, stamp, installs, evicts, reinst,
-     qwait) = tbl
+     qwait, park) = tbl
     return s._replace(
         ftab_pair=fpair, ftab_ready=fready, ftab_stamp=fstamp,
         ctrl_busy=busy, ctrl_stamp=stamp, ctrl_installs=installs,
         ctrl_evictions=evicts, ctrl_reinstalls=reinst,
-        ctrl_queue_wait=qwait)
+        ctrl_queue_wait=qwait, ctrl_failover_park=park)
 
 
 def _activate_ctrl(c: EngineConsts, meta, pol, aux, cache, s: SimState):
@@ -1382,7 +1517,13 @@ def _rates(c: EngineConsts, meta, pol, s: SimState, links, p_active,
            nc, link_bw):
     """Piecewise-constant packet/task rates from the fused network tensors
     (``links``/``p_active``/``nc``/``link_bw`` come straight from
-    ``_activate`` — nothing here is recomputed, DESIGN.md §8)."""
+    ``_activate`` — nothing here is recomputed, DESIGN.md §8).
+
+    With clone slots provisioned (``meta.spec_slots > 0``, DESIGN.md §13)
+    the speculative clones join the per-VM census — a clone steals fair
+    share from its VM's resident tasks exactly like a real task — and the
+    returned ``spec_rate`` carries their MIPS rates (``None`` when
+    speculation is structurally off: the trace is unchanged)."""
     pkt_rate = fairshare.rates(pol["traffic"], links, p_active, link_bw,
                                meta.intra_bw, nc=nc)
     t_active = s.task_state == ACTIVE
@@ -1392,8 +1533,22 @@ def _rates(c: EngineConsts, meta, pol, s: SimState, links, p_active,
     vm_iota = jnp.arange(c.vm_total_mips.shape[0], dtype=jnp.int32)
     n_on_vm = jnp.sum((vm[:, None] == vm_iota[None, :]) & t_active[:, None],
                       axis=0).astype(jnp.int32)
+    s_active = None
+    if meta.spec_slots > 0:
+        s_active = s.spec_of >= 0
+        svm = jnp.maximum(s.spec_vm, 0)
+        n_on_vm = n_on_vm + jnp.sum(
+            (svm[:, None] == vm_iota[None, :]) & s_active[:, None],
+            axis=0).astype(jnp.int32)
     share = c.vm_total_mips[vm] / jnp.maximum(n_on_vm[vm], 1).astype(jnp.float32)
     task_rate = jnp.where(t_active, jnp.minimum(c.vm_core_mips[vm], share), 0.0)
+    if meta.has_degradation:
+        # gray windows throttle every task on the host (DESIGN.md §13);
+        # scaling the final rate scales the per-core ceiling and the fair
+        # share uniformly — the whole host is slow, not one VM
+        hfac = _host_deg_factor(c, s)
+        task_rate = task_rate * hfac[jnp.clip(
+            _vm_host(c, meta, s)[vm], 0, c.host_slow_t.shape[0] - 1)]
     if meta.has_failures:
         # belt-and-braces: a task stranded on a dead host executes nothing
         # (can only happen when EVERY host was dead at placement time)
@@ -1406,7 +1561,143 @@ def _rates(c: EngineConsts, meta, pol, s: SimState, links, p_active,
         # executes nothing until the re-homing completes; vm_mig_until is
         # a dt breakpoint, so the pause ends exactly on time
         task_rate = jnp.where(s.vm_mig_until[vm] > s.time, 0.0, task_rate)
-    return pkt_rate, task_rate, t_active
+    spec_rate = None
+    if meta.spec_slots > 0:
+        svm = jnp.maximum(s.spec_vm, 0)
+        share_s = c.vm_total_mips[svm] / jnp.maximum(
+            n_on_vm[svm], 1).astype(jnp.float32)
+        spec_rate = jnp.where(
+            s_active, jnp.minimum(c.vm_core_mips[svm], share_s), 0.0)
+        host_of_clone = jnp.clip(_vm_host(c, meta, s)[svm], 0,
+                                 c.host_fail_t.shape[0] - 1)
+        if meta.has_degradation:
+            spec_rate = spec_rate * _host_deg_factor(c, s)[host_of_clone]
+        if meta.has_failures:
+            spec_rate = jnp.where(s.host_dead[host_of_clone], 0.0,
+                                  spec_rate)
+        if meta.has_ctrl:
+            spec_rate = jnp.where(s.vm_mig_until[svm] > s.time, 0.0,
+                                  spec_rate)
+    return pkt_rate, task_rate, t_active, spec_rate
+
+
+def _speculate(c: EngineConsts, meta, pol, aux, s: SimState) -> SimState:
+    """YARN speculative execution (DESIGN.md §13): in-loop straggler
+    detection + clone launch into the statically pre-allocated per-job
+    clone slots.  Only called when ``meta.spec_slots > 0``; the whole body
+    is additionally gated on ``pol["speculation"] == SPEC_ON`` (trace-time
+    skipped when the policy is statically off), so an off replica's state
+    never moves.
+
+    Two halves, both scatter-free one-hot contractions:
+
+    * CLEANUP — a clone whose original left ACTIVE (finished first,
+      failed-and-restarted, or reverted by an outage) or whose own host
+      died is cancelled: its elapsed seconds land in ``spec_wasted`` and
+      its VM container frees.  A task keeps ``task_cloned`` forever —
+      one speculative attempt per task per run, like YARN's default.
+    * LAUNCH — at most ONE clone per event step (the AM heartbeat batch):
+      among ACTIVE tasks whose observed mean rate ``(mi - rem)/elapsed``
+      is below HALF their job's live median rate (the per-job median is
+      an O(n^2) pairwise rank count — no sort in the loop body,
+      DESIGN.md §8), the slowest uncloned one with a free slot in its
+      job's slot block gets a clone on the least-loaded live VM that
+      avoids the original's host (so a gray host can't host both copies)
+      and, when any exists, sits on a host OUTSIDE every current
+      degradation window — a clone on a second browned-out host just
+      doubles the waste.  The clone restarts from zero work —
+      speculation races, it does not checkpoint."""
+    spec_static = static_policy_value(pol["speculation"])
+    if spec_static is not None and spec_static != SPEC_ON:
+        return s
+    S = s.spec_of.shape[0]
+    n_t = s.task_rem.shape[0]
+    n_j = s.job_admitted.shape[0]
+    n_hosts_pad = c.host_fail_t.shape[0]
+    t = s.time
+    tiota = jnp.arange(n_t, dtype=jnp.int32)
+    jiota = jnp.arange(n_j, dtype=jnp.int32)
+    siota = jnp.arange(S, dtype=jnp.int32)
+    vm_iota = jnp.arange(s.vm_load.shape[0], dtype=jnp.int32)
+    slot_job = siota // meta.spec_slots
+    vm_host = _vm_host(c, meta, s)
+
+    def do_spec(s: SimState) -> SimState:
+        # --- cleanup
+        orig = jnp.maximum(s.spec_of, 0)
+        live = s.spec_of >= 0
+        gone = s.task_state[orig] != ACTIVE
+        cancel = live & gone
+        if meta.has_failures:
+            clone_host = jnp.clip(vm_host[jnp.maximum(s.spec_vm, 0)], 0,
+                                  n_hosts_pad - 1)
+            cancel = cancel | (live & s.host_dead[clone_host])
+        spec_wasted = s.spec_wasted + jnp.sum(
+            jnp.where(cancel, t - s.spec_start, 0.0))
+        vm_load = s.vm_load - jnp.sum(
+            (jnp.maximum(s.spec_vm, 0)[:, None] == vm_iota[None, :])
+            & cancel[:, None], axis=0).astype(jnp.int32)
+        spec_of = jnp.where(cancel, -1, s.spec_of)
+
+        # --- straggler detection (per-job live median of observed rates)
+        elapsed = t - s.task_start
+        el_ok = (s.task_state == ACTIVE) & c.task_valid & (elapsed > 1e-9)
+        rate = jnp.where(el_ok, (c.task_mi - s.task_rem)
+                         / jnp.maximum(elapsed, 1e-9), 0.0)
+        job = jnp.maximum(c.task_job, 0)
+        same = ((job[:, None] == job[None, :])
+                & el_ok[:, None] & el_ok[None, :])
+        lower = same & ((rate[None, :] < rate[:, None])
+                        | ((rate[None, :] == rate[:, None])
+                           & (tiota[None, :] < tiota[:, None])))
+        n_peer = jnp.sum(same, axis=1)                 # includes self
+        rank = jnp.sum(lower, axis=1)
+        # exactly one median witness per job with >= 1 eligible task
+        is_med = el_ok & (rank == n_peer // 2)
+        med = jnp.sum(jnp.where(is_med[:, None]
+                                & (job[:, None] == jiota[None, :]),
+                                rate[:, None], 0.0), axis=0)  # [n_j]
+        free = spec_of < 0
+        job_free = jnp.sum((slot_job[:, None] == jiota[None, :])
+                           & free[:, None], axis=0) > 0       # [n_j]
+        straggler = (el_ok & ~s.task_cloned
+                     & (2.0 * rate < med[job]) & job_free[job])
+
+        # --- launch the slowest straggler (one per step)
+        vm_live = jnp.arange(meta.n_vms) < c.n_vms
+        if meta.has_failures:
+            vm_live = vm_live & ~s.host_dead[
+                jnp.clip(vm_host, 0, n_hosts_pad - 1)]
+        launch = jnp.any(straggler) & jnp.any(vm_live)
+        w = jnp.argmin(jnp.where(straggler, rate, _INF)).astype(jnp.int32)
+        slot = jnp.min(jnp.where(free & (slot_job == job[w]), siota, S))
+        slot = jnp.minimum(slot, S - 1)
+        host_w = jnp.clip(vm_host[jnp.maximum(s.task_vm[w], 0)], 0,
+                          n_hosts_pad - 1)
+        off_host = vm_live & (jnp.clip(vm_host, 0, n_hosts_pad - 1)
+                              != host_w)
+        use = jnp.where(jnp.any(off_host), off_host, vm_live)
+        if meta.has_degradation:
+            undeg = use & (_host_deg_factor(c, s)[
+                jnp.clip(vm_host, 0, n_hosts_pad - 1)] >= 1.0)
+            use = jnp.where(jnp.any(undeg), undeg, use)
+        pick = jnp.argmin(jnp.where(use, vm_load,
+                                    jnp.iinfo(jnp.int32).max)
+                          ).astype(jnp.int32)
+        oh = (siota == slot) & launch
+        return s._replace(
+            spec_of=jnp.where(oh, w, spec_of),
+            spec_vm=jnp.where(oh, pick, s.spec_vm),
+            spec_rem=jnp.where(oh, c.task_mi[w], s.spec_rem),
+            spec_start=jnp.where(oh, t, s.spec_start),
+            task_cloned=s.task_cloned | ((tiota == w) & launch),
+            vm_load=vm_load + ((vm_iota == pick) & launch
+                               ).astype(jnp.int32),
+            spec_launches=s.spec_launches + launch.astype(jnp.int32),
+            spec_wasted=spec_wasted)
+
+    return jax.lax.cond(pol["speculation"] == SPEC_ON, do_spec,
+                        lambda s: s, s)
 
 
 def _finished(c: EngineConsts, meta, s: SimState) -> jnp.ndarray:
@@ -1463,8 +1754,14 @@ def _step(c: EngineConsts, meta, pol, aux, carry):
     else:
         s, links, p_active, nc, link_bw = _activate(c, meta, pol, aux,
                                                     cache, s)
-    pkt_rate, task_rate, t_active = _rates(c, meta, pol, s, links, p_active,
-                                           nc, link_bw)
+    if meta.spec_slots > 0:
+        # clone housekeeping + straggler launch happen AFTER activation
+        # (so just-activated tasks are census-visible) and BEFORE rates
+        # (so a launched clone shares its VM from this very interval)
+        s = _speculate(c, meta, pol, aux, s)
+    pkt_rate, task_rate, t_active, spec_rate = _rates(c, meta, pol, s,
+                                                      links, p_active,
+                                                      nc, link_bw)
 
     # earliest horizon (Eq. 4 generalized)
     dt_p = jnp.min(jnp.where(p_active & (pkt_rate > 0),
@@ -1482,6 +1779,13 @@ def _step(c: EngineConsts, meta, pol, aux, carry):
         dt_f = jnp.min(jnp.where(c.fail_breaks > s.time,
                                  c.fail_breaks - s.time, _INF))
         dt = jnp.minimum(dt, dt_f)
+    if meta.has_degradation:
+        # gray-window edges are rate breakpoints exactly like outages
+        # (DESIGN.md §13); ``deg_breaks`` pre-concatenates the four
+        # schedule tensors so this is ONE masked min
+        dt_d = jnp.min(jnp.where(c.deg_breaks > s.time,
+                                 c.deg_breaks - s.time, _INF))
+        dt = jnp.minimum(dt, dt_d)
     if meta.has_ctrl:
         # rule-install completions and migration resumes are rate
         # breakpoints exactly like failures (DESIGN.md §10): the analytic
@@ -1492,6 +1796,21 @@ def _step(c: EngineConsts, meta, pol, aux, carry):
         dt_m = jnp.min(jnp.where(s.vm_mig_until > s.time,
                                  s.vm_mig_until - s.time, _INF))
         dt = jnp.minimum(dt, jnp.minimum(dt_c, dt_m))
+        # controller failover edges (primary down, election gap end,
+        # primary back — DESIGN.md §13) are breakpoints too; all three
+        # are inf when failover is unconfigured
+        fo = jnp.stack([
+            c.ctrl_fail_t,
+            jnp.minimum(c.ctrl_fail_t + c.ctrl_failover_delay,
+                        c.ctrl_recover_t),
+            c.ctrl_recover_t])
+        dt_fo = jnp.min(jnp.where(fo > s.time, fo - s.time, _INF))
+        dt = jnp.minimum(dt, dt_fo)
+    if meta.spec_slots > 0:
+        # clone finishes join the min like task finishes
+        dt_s = jnp.min(jnp.where((s.spec_of >= 0) & (spec_rate > 0),
+                                 s.spec_rem / spec_rate, _INF))
+        dt = jnp.minimum(dt, dt_s)
     stalled = jnp.isinf(dt)
     dt = jnp.where(stalled, 0.0, dt)
 
@@ -1517,7 +1836,21 @@ def _step(c: EngineConsts, meta, pol, aux, carry):
 
     mips_used = jax.lax.fori_loop(0, jnp.sum(t_active.astype(jnp.int32)),
                                   mips_one, jnp.zeros_like(c.host_total_mips))
-    util = jnp.clip(mips_used / jnp.maximum(c.host_total_mips, 1e-9), 0.0, 1.0)
+    if meta.spec_slots > 0:
+        # clones burn host cycles like real tasks; the slot axis is tiny
+        # (n_jobs * spec_slots) so a dense one-hot contraction is cheaper
+        # than extending the compacted loop
+        clone_host = _vm_host(c, meta, s)[jnp.maximum(s.spec_vm, 0)]
+        mips_used = mips_used + jnp.sum(
+            jnp.where((s.spec_of >= 0)[:, None]
+                      & (hiota[None, :] == clone_host[:, None]),
+                      spec_rate[:, None], 0.0), axis=0)
+    # utilization is relative to the CURRENT (possibly degraded) capacity:
+    # a saturated gray host draws full power for less work (DESIGN.md §13);
+    # _effective_host_mips is exactly host_total_mips when degradation is
+    # off, keeping the off-switch trace unchanged
+    util = jnp.clip(mips_used / jnp.maximum(_effective_host_mips(c, meta, s),
+                                            1e-9), 0.0, 1.0)
     if meta.has_failures:
         util = jnp.where(s.host_dead, 0.0, util)  # dead hosts draw 0 W
     host_energy = s.host_energy + host_power(util, meta.energy) * dt
@@ -1555,6 +1888,20 @@ def _step(c: EngineConsts, meta, pol, aux, carry):
     else:
         job_downtime = s.job_downtime
 
+    if meta.has_degradation:
+        # wall-clock seconds with ANY live gray window open — the
+        # degraded-exposure metric (same pass-through shape as
+        # job_downtime: off-replicas in a packed sweep accumulate 0)
+        any_deg = (jnp.any((c.host_slow_t <= s.time)
+                           & (s.time < c.host_restore_t)
+                           & (c.host_deg_factor != 1.0))
+                   | jnp.any((c.link_slow_t <= s.time)
+                             & (s.time < c.link_restore_t)
+                             & (c.link_deg_factor != 1.0)))
+        degraded_time = s.degraded_time + jnp.where(any_deg, dt, 0.0)
+    else:
+        degraded_time = s.degraded_time
+
     # advance
     time = s.time + dt
     pkt_rem = jnp.where(p_active, s.pkt_rem - pkt_rate * dt, s.pkt_rem)
@@ -1566,6 +1913,14 @@ def _step(c: EngineConsts, meta, pol, aux, carry):
     pkt_finish = jnp.where(p_done_now, time, s.pkt_finish)
     task_state = jnp.where(t_done_now, DONE, s.task_state)
     task_finish = jnp.where(t_done_now, time, s.task_finish)
+
+    if meta.has_ctrl:
+        # count the primary→backup handover once, when the clock passes
+        # ctrl_fail_t (a dt breakpoint, so the crossing is exact)
+        crossed = (s.time <= c.ctrl_fail_t) & (time > c.ctrl_fail_t)
+        ctrl_failovers = s.ctrl_failovers + crossed.astype(jnp.int32)
+    else:
+        ctrl_failovers = s.ctrl_failovers
 
     # completions feed gates + release their channels.  Only a handful of
     # packets finish per event, so this is a compacted scan over the done
@@ -1616,6 +1971,40 @@ def _step(c: EngineConsts, meta, pol, aux, carry):
         (vm_safe[:, None] == vm_iota[None, :])
         & t_done_now[:, None], axis=0).astype(jnp.int32)
 
+    spec_of, spec_rem = s.spec_of, s.spec_rem
+    spec_wins, spec_wasted = s.spec_wins, s.spec_wasted
+    if meta.spec_slots > 0:
+        # clone completions: first finish WINS the race (DESIGN.md §13).
+        # A tie on the same breakpoint goes to the original, so the
+        # speculation axis can only ever help a task's finish time.
+        s_orig = jnp.maximum(spec_of, 0)
+        s_live = spec_of >= 0
+        spec_rem = jnp.where(s_live, spec_rem - spec_rate * dt, spec_rem)
+        clone_done = s_live & (spec_rem <= aux["task_tol"][s_orig])
+        win = clone_done & ~t_done_now[s_orig]
+        # task-axis effect of the wins (one-hot, not a scatter)
+        win_t = jnp.sum((s_orig[:, None] == tiota[None, :])
+                        & win[:, None], axis=0) > 0
+        task_state = jnp.where(win_t, DONE, task_state)
+        task_finish = jnp.where(win_t, time, task_finish)
+        task_rem = jnp.where(win_t, 0.0, task_rem)
+        # the losing copy frees its container: the overtaken ORIGINAL's VM
+        # on a win, the clone's VM on every clone finish
+        vm_load = vm_load - jnp.sum(
+            (vm_safe[:, None] == vm_iota[None, :])
+            & win_t[:, None], axis=0).astype(jnp.int32)
+        vm_load = vm_load - jnp.sum(
+            (jnp.maximum(s.spec_vm, 0)[:, None] == vm_iota[None, :])
+            & clone_done[:, None], axis=0).astype(jnp.int32)
+        # wasted seconds: the original's whole run on a win, the clone's
+        # on a photo-finish loss (cancelled clones accrue in _speculate)
+        waste = jnp.where(win, time - s.task_start[s_orig],
+                          time - s.spec_start)
+        spec_wasted = spec_wasted + jnp.sum(
+            jnp.where(clone_done, waste, 0.0))
+        spec_wins = spec_wins + jnp.sum(win.astype(jnp.int32))
+        spec_of = jnp.where(clone_done, -1, spec_of)
+
     return s._replace(
         time=time, steps=s.steps + 1, stalled=stalled,
         job_out_done=job_out_done, job_done_t=job_done_t,
@@ -1623,7 +2012,10 @@ def _step(c: EngineConsts, meta, pol, aux, carry):
         task_finish=task_finish,
         pkt_state=pkt_state, pkt_rem=pkt_rem, pkt_finish=pkt_finish,
         vm_load=vm_load, host_energy=host_energy, host_busy=host_busy,
-        switch_energy=switch_energy, job_downtime=job_downtime), \
+        switch_energy=switch_energy, job_downtime=job_downtime,
+        degraded_time=degraded_time, spec_of=spec_of, spec_rem=spec_rem,
+        spec_wins=spec_wins, spec_wasted=spec_wasted,
+        ctrl_failovers=ctrl_failovers), \
         {**cache, "nc": nc_next}
 
 
@@ -1660,7 +2052,7 @@ def make_packed_simulator(meta):
             s0: SimState | None = None) -> SimState:
         if s0 is None:
             s0 = init_state_from_consts(consts, meta.n_switches,
-                                        meta.ctrl_slots)
+                                        meta.ctrl_slots, meta.spec_slots)
         aux = _make_aux(consts, pol)
         # nothing is active at t=0, so the carried channel counts start 0
         cache0 = {**_endpoint_cache(consts, meta, s0),
@@ -1714,7 +2106,8 @@ def init_fleet_carry(consts: EngineConsts, meta, width: int):
     ``(SimState, step-cache, done)`` with every leaf gaining a leading lane
     axis.  Lanes start identical — policies differ, states don't."""
     meta = SimMeta.coerce(meta)
-    s0 = init_state_from_consts(consts, meta.n_switches, meta.ctrl_slots)
+    s0 = init_state_from_consts(consts, meta.n_switches, meta.ctrl_slots,
+                                meta.spec_slots)
     cache0 = {**_endpoint_cache(consts, meta, s0),
               "nc": jnp.zeros(meta.n_links, jnp.int32)}
     done0 = _finished(consts, meta, s0)

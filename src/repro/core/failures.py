@@ -73,9 +73,23 @@ class FailureSchedule:
         assert self.link_fail_t.shape == (n_links,), \
             f"link_fail_t shape {self.link_fail_t.shape} != ({n_links},)"
         assert self.link_recover_t.shape == (n_links,)
-        for fail, rec in ((self.host_fail_t, self.host_recover_t),
-                          (self.link_fail_t, self.link_recover_t)):
-            assert np.all(rec >= fail), "recover_t must be >= fail_t"
+        for kind, fail, rec in (
+                ("host", self.host_fail_t, self.host_recover_t),
+                ("link", self.link_fail_t, self.link_recover_t)):
+            # a finite window must have positive length: ``rec == fail``
+            # would be a zero-length outage whose fail AND recover land on
+            # the same dt breakpoint (the transition delta never fires),
+            # and ``rec < fail`` is a recovery before the failure — both
+            # silently passed the old ``rec >= fail`` check for the
+            # degenerate equal case and are rejected loudly now
+            bad = np.isfinite(fail) & (rec <= fail)
+            if np.any(bad):
+                ids = np.flatnonzero(bad)
+                raise ValueError(
+                    f"{kind} outage window(s) {ids.tolist()} have "
+                    f"recover_t <= fail_t (zero/negative length): "
+                    f"fail_t={fail[ids].tolist()} "
+                    f"recover_t={rec[ids].tolist()}")
             assert not np.any(np.isfinite(rec) & ~np.isfinite(fail)), \
                 "finite recover_t without a finite fail_t"
         return self
@@ -108,4 +122,137 @@ def link_cut(n_hosts: int, n_links: int, links, at: float,
     for li in np.atleast_1d(links):
         s.link_fail_t[li] = at
         s.link_recover_t[li] = recover_at
+    return s.validate(n_hosts, n_links)
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradationSchedule:
+    """Gray-failure windows (DESIGN.md §13): piecewise-constant rate
+    MULTIPLIERS instead of binary outages.
+
+    A host executes at ``host_factor`` x MIPS on ``[host_slow_t,
+    host_restore_t)`` (the straggler model: a slow disk or an
+    oversubscribed NodeManager throttles every task on the host), a
+    directed link carries ``link_factor`` x bandwidth on its window (an
+    oversubscribed NIC / flapping optic).  Outside the window — and
+    whenever ``slow_t`` is ``inf`` or ``factor`` is exactly 1.0 — the
+    device runs at full rate.  The window instants join the engine's
+    analytic ``dt`` min exactly like the ``FailureSchedule`` breakpoints
+    (same §7 pattern), so degraded rates stay piecewise constant between
+    events and no event heap is needed.
+
+    Unlike an outage, degradation never reverts work: tasks and packets
+    keep their placement and routes and simply progress slower — that is
+    what makes it GRAY.  Factors > 1 (a burst-boost window) are allowed.
+    """
+
+    host_slow_t: np.ndarray     # f32 [n_hosts]: window start (inf = never)
+    host_restore_t: np.ndarray  # f32 [n_hosts]: window end
+    host_factor: np.ndarray     # f32 [n_hosts]: MIPS multiplier in-window
+    link_slow_t: np.ndarray     # f32 [n_links]
+    link_restore_t: np.ndarray  # f32 [n_links]
+    link_factor: np.ndarray     # f32 [n_links]: bandwidth multiplier
+
+    @property
+    def _live_host(self) -> np.ndarray:
+        return np.isfinite(self.host_slow_t) & (self.host_factor != 1.0)
+
+    @property
+    def _live_link(self) -> np.ndarray:
+        return np.isfinite(self.link_slow_t) & (self.link_factor != 1.0)
+
+    @property
+    def any_degradation(self) -> bool:
+        """True iff some window can change a rate.  An all-``factor=1.0``
+        (or all-``inf``) schedule is the identity: ``SimMeta``'s
+        ``has_degradation`` stays False and the engine traces EXACTLY the
+        pre-degradation program — same contract as ``any_failures``."""
+        return bool(self._live_host.any() or self._live_link.any())
+
+    @property
+    def n_events(self) -> int:
+        """Finite slow/restore instants on LIVE windows (drives the
+        engine's ``max_steps`` cap like ``FailureSchedule.n_events``)."""
+        lh, ll = self._live_host, self._live_link
+        return int(sum(np.isfinite(a[m]).sum() for a, m in (
+            (self.host_slow_t, lh), (self.host_restore_t, lh),
+            (self.link_slow_t, ll), (self.link_restore_t, ll))))
+
+    def instants(self) -> np.ndarray:
+        """All LIVE slow/restore instants as ONE f32 tensor (``inf`` =
+        never), shape ``[2*n_hosts + 2*n_links]`` — fixed by the topology
+        like ``FailureSchedule.instants``.  Inert windows (``factor ==
+        1.0``) are masked to ``inf`` so a mixed packed sweep never pays
+        extra event steps for an identity lane."""
+        lh, ll = self._live_host, self._live_link
+        return np.concatenate([
+            np.where(lh, self.host_slow_t, INF),
+            np.where(lh, self.host_restore_t, INF),
+            np.where(ll, self.link_slow_t, INF),
+            np.where(ll, self.link_restore_t, INF),
+        ]).astype(np.float32)
+
+    def validate(self, n_hosts: int, n_links: int) -> "DegradationSchedule":
+        assert self.host_slow_t.shape == (n_hosts,), \
+            f"host_slow_t shape {self.host_slow_t.shape} != ({n_hosts},)"
+        assert self.host_restore_t.shape == (n_hosts,)
+        assert self.host_factor.shape == (n_hosts,)
+        assert self.link_slow_t.shape == (n_links,), \
+            f"link_slow_t shape {self.link_slow_t.shape} != ({n_links},)"
+        assert self.link_restore_t.shape == (n_links,)
+        assert self.link_factor.shape == (n_links,)
+        for kind, slow, restore, factor in (
+                ("host", self.host_slow_t, self.host_restore_t,
+                 self.host_factor),
+                ("link", self.link_slow_t, self.link_restore_t,
+                 self.link_factor)):
+            bad = np.isfinite(slow) & (restore <= slow)
+            if np.any(bad):
+                ids = np.flatnonzero(bad)
+                raise ValueError(
+                    f"{kind} degradation window(s) {ids.tolist()} have "
+                    f"restore_t <= slow_t (zero/negative length)")
+            if np.any(~(factor > 0.0) | ~np.isfinite(factor)):
+                raise ValueError(
+                    f"{kind}_factor must be finite and > 0 (a zero rate "
+                    f"is an outage — use FailureSchedule)")
+            assert not np.any(np.isfinite(restore) & ~np.isfinite(slow)), \
+                "finite restore_t without a finite slow_t"
+        return self
+
+
+def no_degradation(n_hosts: int, n_links: int) -> DegradationSchedule:
+    """The identity schedule: every device at factor 1.0 forever."""
+    return DegradationSchedule(
+        host_slow_t=np.full(n_hosts, INF, np.float32),
+        host_restore_t=np.full(n_hosts, INF, np.float32),
+        host_factor=np.ones(n_hosts, np.float32),
+        link_slow_t=np.full(n_links, INF, np.float32),
+        link_restore_t=np.full(n_links, INF, np.float32),
+        link_factor=np.ones(n_links, np.float32),
+    )
+
+
+def host_slowdown(n_hosts: int, n_links: int, host: int, at: float,
+                  factor: float,
+                  restore_at: float = np.inf) -> DegradationSchedule:
+    """One host runs at ``factor`` x MIPS from ``at`` (forever unless
+    ``restore_at``) — the minimal straggler scenario."""
+    s = no_degradation(n_hosts, n_links)
+    s.host_slow_t[host] = at
+    s.host_restore_t[host] = restore_at
+    s.host_factor[host] = factor
+    return s.validate(n_hosts, n_links)
+
+
+def link_brownout(n_hosts: int, n_links: int, links, at: float,
+                  factor: float,
+                  restore_at: float = np.inf) -> DegradationSchedule:
+    """The given directed link ids carry ``factor`` x bandwidth from
+    ``at`` (pass both directions to throttle a full-duplex cable)."""
+    s = no_degradation(n_hosts, n_links)
+    for li in np.atleast_1d(links):
+        s.link_slow_t[li] = at
+        s.link_restore_t[li] = restore_at
+        s.link_factor[li] = factor
     return s.validate(n_hosts, n_links)

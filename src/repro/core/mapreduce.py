@@ -20,7 +20,7 @@ import numpy as np
 
 from .ctrlplane import CtrlPlaneConfig
 from .energy import EnergyParams
-from .failures import FailureSchedule
+from .failures import DegradationSchedule, FailureSchedule
 from .routing import RouteTable, build_route_table
 from .topology import Topology
 
@@ -99,6 +99,12 @@ class SimSetup:
     # optional control-plane resource model (DESIGN.md §10); None = the
     # identity instant-controller config
     ctrl: CtrlPlaneConfig | None = None
+    # optional gray-failure rate-multiplier windows (DESIGN.md §13);
+    # None = the identity factor-1.0 schedule
+    degradation: DegradationSchedule | None = None
+    # speculative-execution clone slots PER JOB (DESIGN.md §13); 0 =
+    # speculation structurally off (the clone tensors are zero-length)
+    spec_slots: int = 0
 
     @property
     def n_jobs(self) -> int:
@@ -117,7 +123,9 @@ def build_setup(jobs: Sequence[JobSpec], cluster: ClusterSpec,
                 route_table: RouteTable | None = None,
                 k_max: int = 16, split: int = 1,
                 failures: FailureSchedule | None = None,
-                ctrl: CtrlPlaneConfig | None = None) -> SimSetup:
+                ctrl: CtrlPlaneConfig | None = None,
+                degradation: DegradationSchedule | None = None,
+                spec_slots: int = 0) -> SimSetup:
     """``split`` = network packets per logical transfer (paper: workloads
     specify "the size of network packets" in the CSV; a data block is sent as
     multiple packet objects, EACH routed by the controller — "two packets
@@ -186,11 +194,17 @@ def build_setup(jobs: Sequence[JobSpec], cluster: ClusterSpec,
         failures.validate(cluster.topo.n_hosts, cluster.topo.n_links)
     if ctrl is not None:
         ctrl.validate()
+    if degradation is not None:
+        degradation.validate(cluster.topo.n_hosts, cluster.topo.n_links)
+    if spec_slots < 0:
+        raise ValueError("spec_slots must be >= 0")
     return SimSetup(
         cluster=cluster,
         route_table=rt,
         failures=failures,
         ctrl=ctrl,
+        degradation=degradation,
+        spec_slots=int(spec_slots),
         jobs=tuple(jobs),
         job_release=np.asarray([j.submit_time for j in jobs], np.float32),
         job_total_mi=np.asarray([j.total_mi for j in jobs], np.float32),

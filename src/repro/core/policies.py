@@ -53,6 +53,11 @@ MIG_STATIC = 0         # VMs stay where the cluster spec put them
 MIG_CONGESTION = 1     # re-home a VM when its aggregate link cost exceeds
                        # CtrlPlaneConfig.mig_threshold
 
+# YARN speculative execution (DESIGN.md §13); only meaningful when clone
+# slots are provisioned (SimMeta.spec_slots > 0)
+SPEC_OFF = 0           # stragglers run to completion unassisted
+SPEC_ON = 1            # clone the slowest straggler, first finish wins
+
 
 @dataclasses.dataclass(frozen=True)
 class PolicyField:
@@ -211,6 +216,12 @@ register_policy_field(
     choices={"static": MIG_STATIC, "congestion": MIG_CONGESTION},
     doc="dynamic VM placement: migrate-on-congestion re-homing "
         "(DESIGN.md §10; inert unless SimMeta.has_ctrl)")
+register_policy_field(
+    "speculation", SPEC_OFF,
+    choices={"off": SPEC_OFF, "on": SPEC_ON},
+    doc="YARN speculative execution: clone the slowest straggler task "
+        "into a pre-allocated per-job slot, first finish wins "
+        "(DESIGN.md §13; inert unless SimMeta.spec_slots > 0)")
 register_policy_field(
     "seed", 0,
     doc="per-replica hash seed (random placement / legacy route pins)")

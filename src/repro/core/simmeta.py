@@ -49,6 +49,14 @@ class SimMeta:
     # 0 when the control plane is off or uncached — the flow-table state
     # tensors then have a zero-length slot axis and are inert.
     ctrl_slots: int = 0
+    # True iff some replica's degradation schedule has a live window
+    # (DESIGN.md §13) — same trace-time contract as ``has_failures``:
+    # False traces EXACTLY the pre-degradation program.
+    has_degradation: bool = False
+    # static speculative-execution clone slots PER JOB (DESIGN.md §13);
+    # 0 (speculation structurally off) gives the clone state tensors a
+    # zero-length axis and traces the exact pre-speculation program.
+    spec_slots: int = 0
 
     @classmethod
     def coerce(cls, meta: "SimMeta" | Mapping[str, Any]) -> "SimMeta":

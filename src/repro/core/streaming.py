@@ -47,7 +47,7 @@ import numpy as np
 
 from .ctrlplane import CtrlPlaneConfig
 from .engine import EngineConsts, _finished
-from .failures import FailureSchedule
+from .failures import DegradationSchedule, FailureSchedule
 from .mapreduce import (GBIT, KIND_MAP, KIND_REDUCE, PHASE_IN, PHASE_OUT,
                         PHASE_SHUFFLE, VOID, WAITING, ClusterSpec, JobSpec,
                         SimSetup)
@@ -214,7 +214,9 @@ def slot_arrays(spec: RingSpec, slot: int,
 def ring_setup(jobs: Sequence[JobSpec], cluster: ClusterSpec, spec: RingSpec,
                route_table: Optional[RouteTable] = None, k_max: int = 16,
                failures: Optional[FailureSchedule] = None,
-               ctrl: Optional[CtrlPlaneConfig] = None) -> SimSetup:
+               ctrl: Optional[CtrlPlaneConfig] = None,
+               degradation: Optional[DegradationSchedule] = None,
+               spec_slots: int = 0) -> SimSetup:
     """A full ring ``SimSetup``: the first ``len(jobs)`` slots loaded, the
     rest empty.  This is an ordinary setup — ``make_consts`` /
     ``Experiment.run`` accept it unchanged, which is exactly the finite-
@@ -235,6 +237,8 @@ def ring_setup(jobs: Sequence[JobSpec], cluster: ClusterSpec, spec: RingSpec,
         route_table=rt,
         failures=failures,
         ctrl=ctrl,
+        degradation=degradation,
+        spec_slots=int(spec_slots),
         jobs=tuple(jobs),
         job_release=cat("job_release"),
         job_total_mi=cat("job_total_mi"),
@@ -300,7 +304,30 @@ def make_refill(meta):
     f = jnp.float32
 
     def lane_refill(c, s, job_m, task_m, pkt_m, lane_m):
+        extra = {}
+        if meta.spec_slots > 0:
+            # cancel any clone still bound to a recycled job slot (a lane
+            # can finish with live clones and never step again before the
+            # refill, so the engine's own cleanup never sees them) and
+            # re-arm the one-clone-per-task latch for the refilled tasks
+            S = s.spec_of.shape[0]
+            slot_job = jnp.arange(S, dtype=jnp.int32) // meta.spec_slots
+            clone_m = job_m[slot_job]
+            live = clone_m & (s.spec_of >= 0)
+            vm_iota = jnp.arange(s.vm_load.shape[0], dtype=jnp.int32)
+            extra = dict(
+                spec_of=jnp.where(clone_m, -1, s.spec_of),
+                spec_vm=jnp.where(clone_m, -1, s.spec_vm),
+                spec_rem=jnp.where(clone_m, 0.0, s.spec_rem).astype(f),
+                spec_start=jnp.where(clone_m, 0.0, s.spec_start).astype(f),
+                task_cloned=jnp.where(task_m, False, s.task_cloned),
+                vm_load=s.vm_load - jnp.sum(
+                    (jnp.maximum(s.spec_vm, 0)[:, None]
+                     == vm_iota[None, :]) & live[:, None],
+                    axis=0).astype(jnp.int32),
+            )
         return s._replace(
+            **extra,
             steps=jnp.where(lane_m, jnp.int32(0), s.steps),
             job_admitted=jnp.where(job_m, False, s.job_admitted),
             job_admit_t=jnp.where(job_m, jnp.nan, s.job_admit_t).astype(f),

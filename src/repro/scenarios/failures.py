@@ -19,7 +19,8 @@ from typing import Callable
 
 import numpy as np
 
-from ..core.failures import FailureSchedule, no_failures
+from ..core.failures import (DegradationSchedule, FailureSchedule,
+                             no_degradation, no_failures)
 from ..core.mapreduce import SimSetup
 from ..core.topology import Topology
 
@@ -65,5 +66,64 @@ def failure_injector(**kw) -> Callable[[SimSetup], FailureSchedule]:
 
     def inject(setup: SimSetup) -> FailureSchedule:
         return random_failures(setup.cluster.topo, **kw)
+
+    return inject
+
+
+def random_degradation(topo: Topology, *, host_rate: float = 0.0,
+                       link_rate: float = 0.0, mean_factor: float = 0.5,
+                       mttr: float | None = None,
+                       horizon: float = np.inf,
+                       seed: int = 0) -> DegradationSchedule:
+    """Seeded gray-failure trace (DESIGN.md §13): exponential window
+    arrival / exponential restore, mirroring ``random_failures`` but
+    producing rate MULTIPLIERS instead of outages.
+
+    host_rate / link_rate : gray windows per second per device (0 = never)
+    mean_factor           : mean of the in-window rate multiplier; each
+                            window draws factor ~ U(mean_factor/2,
+                            min(3*mean_factor/2, 0.95)) — always < 1 so a
+                            window genuinely degrades, never a full outage
+    mttr                  : mean seconds until the device restores; None =
+                            degraded for the rest of the run
+    horizon               : windows opening past this instant are dropped
+    """
+    rng = np.random.default_rng(seed)
+    sched = no_degradation(topo.n_hosts, topo.n_links)
+    lo = max(mean_factor / 2.0, 0.01)
+    hi = min(1.5 * mean_factor, 0.95)
+    hi = max(hi, lo + 1e-3)
+
+    def draw(slow_t, restore_t, factor, idx, rate):
+        if rate <= 0.0:
+            return
+        t = rng.exponential(1.0 / rate)
+        if not (t < horizon):
+            return
+        slow_t[idx] = t
+        restore_t[idx] = t + rng.exponential(mttr) if mttr is not None \
+            else np.inf
+        factor[idx] = rng.uniform(lo, hi)
+
+    for h in range(topo.n_hosts):
+        draw(sched.host_slow_t, sched.host_restore_t, sched.host_factor,
+             h, host_rate)
+    # one draw per undirected cable, applied to both directed slots
+    for a, b in topo.cable_pairs():
+        draw(sched.link_slow_t, sched.link_restore_t, sched.link_factor,
+             a, link_rate)
+        sched.link_slow_t[b] = sched.link_slow_t[a]
+        sched.link_restore_t[b] = sched.link_restore_t[a]
+        sched.link_factor[b] = sched.link_factor[a]
+    return sched.validate(topo.n_hosts, topo.n_links)
+
+
+def degradation_injector(**kw) -> Callable[[SimSetup], DegradationSchedule]:
+    """A ``(SimSetup) -> DegradationSchedule`` closure over
+    ``random_degradation`` parameters — the shape
+    ``Experiment(degradation=...)`` accepts (DESIGN.md §13)."""
+
+    def inject(setup: SimSetup) -> DegradationSchedule:
+        return random_degradation(setup.cluster.topo, **kw)
 
     return inject

@@ -39,7 +39,7 @@ from ..core.engine import (EngineConsts, NODE_OFFSET, UNREACHABLE_HOPS,
                            default_max_steps, job_n_tasks_np,
                            job_valid_mask, task_rank_in_job_np)
 from ..core.ctrlplane import no_ctrl
-from ..core.failures import no_failures
+from ..core.failures import no_degradation, no_failures
 from ..core.mapreduce import SimSetup
 from ..core.policies import as_policy_arrays, policy_field_names
 from ..core.report import energy_report, job_report_consts
@@ -57,6 +57,7 @@ def _pack_one(setup: SimSetup, dims: Dict[str, int]) -> Dict[str, np.ndarray]:
     topo = setup.cluster.topo
     rt = setup.route_table
     sched = setup.failures or no_failures(topo.n_hosts, topo.n_links)
+    deg = setup.degradation or no_degradation(topo.n_hosts, topo.n_links)
     cfg = setup.ctrl or no_ctrl()
     H, SW = dims["n_hosts"], dims["n_switches"]
     Nn, L, K, HP = dims["n_nodes"], dims["n_links"], dims["k_max"], dims["max_hops"]
@@ -106,6 +107,36 @@ def _pack_one(setup: SimSetup, dims: Dict[str, int]) -> Dict[str, np.ndarray]:
         "link_recover_t": _pad1(np.asarray(sched.link_recover_t, np.float32),
                                 L, np.inf),
     }
+
+    # degradation schedule (DESIGN.md §13): pad devices never degrade
+    # (slow_t=inf, factor=1.0); the breakpoint tensor is rebuilt from the
+    # PADDED windows so its layout matches ``DegradationSchedule.instants``
+    # at the padded dims — inert windows masked to inf, like the unpacked
+    # path
+    deg_pad = {
+        "host_slow_t": _pad1(np.asarray(deg.host_slow_t, np.float32),
+                             H, np.inf),
+        "host_restore_t": _pad1(np.asarray(deg.host_restore_t, np.float32),
+                                H, np.inf),
+        "host_deg_factor": _pad1(np.asarray(deg.host_factor, np.float32),
+                                 H, 1.0),
+        "link_slow_t": _pad1(np.asarray(deg.link_slow_t, np.float32),
+                             L, np.inf),
+        "link_restore_t": _pad1(np.asarray(deg.link_restore_t, np.float32),
+                                L, np.inf),
+        "link_deg_factor": _pad1(np.asarray(deg.link_factor, np.float32),
+                                 L, 1.0),
+    }
+    lh = (np.isfinite(deg_pad["host_slow_t"])
+          & (deg_pad["host_deg_factor"] != 1.0))
+    ll = (np.isfinite(deg_pad["link_slow_t"])
+          & (deg_pad["link_deg_factor"] != 1.0))
+    deg_breaks = np.concatenate([
+        np.where(lh, deg_pad["host_slow_t"], np.inf),
+        np.where(lh, deg_pad["host_restore_t"], np.inf),
+        np.where(ll, deg_pad["link_slow_t"], np.inf),
+        np.where(ll, deg_pad["link_restore_t"], np.inf),
+    ]).astype(np.float32)
 
     cl = setup.cluster
     return {
@@ -171,6 +202,8 @@ def _pack_one(setup: SimSetup, dims: Dict[str, int]) -> Dict[str, np.ndarray]:
         "fail_breaks": np.concatenate([
             sched_pad["host_fail_t"], sched_pad["host_recover_t"],
             sched_pad["link_fail_t"], sched_pad["link_recover_t"]]),
+        **deg_pad,
+        "deg_breaks": deg_breaks,
         # control plane (DESIGN.md §10): identity scalars when the replica
         # carries no config — its lanes behave like the oracle controller
         "ctrl_on": np.bool_(cfg.any_ctrl),
@@ -181,6 +214,13 @@ def _pack_one(setup: SimSetup, dims: Dict[str, int]) -> Dict[str, np.ndarray]:
         "mig_cooldown": np.float32(cfg.mig_cooldown),
         "mig_limit": np.int32(cfg.mig_limit),
         "pair_hops": pair_hops,
+        # controller failover scalars (DESIGN.md §13); inert (inf fail_t)
+        # for replicas without a failover window
+        "ctrl_fail_t": np.float32(cfg.ctrl_fail_t),
+        "ctrl_recover_t": np.float32(cfg.ctrl_recover_t),
+        "ctrl_failover_delay": np.float32(cfg.failover_delay),
+        "ctrl_backup_rate": np.float32(cfg.backup_rate),
+        "ctrl_backup_latency": np.float32(cfg.backup_latency),
     }
 
 
@@ -228,6 +268,10 @@ def pack_setups(setups: Sequence[SimSetup]
         ctrl_slots=max((s.ctrl.table_slots for s in setups
                         if s.ctrl is not None and s.ctrl.any_ctrl),
                        default=0),
+        has_degradation=any(
+            s.degradation is not None and s.degradation.any_degradation
+            for s in setups),
+        spec_slots=max(int(s.spec_slots) for s in setups),
     )
     return consts, meta
 

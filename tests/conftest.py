@@ -38,6 +38,15 @@ def with_ctrl(setup, cfg):
     return dataclasses.replace(setup, ctrl=cfg)
 
 
+def with_degradation(setup, sched, spec_slots=None):
+    """A copy of ``setup`` carrying the given DegradationSchedule (and
+    optionally clone capacity for the speculation axis)."""
+    kw = {"degradation": sched}
+    if spec_slots is not None:
+        kw["spec_slots"] = spec_slots
+    return dataclasses.replace(setup, **kw)
+
+
 def dims(setup):
     """-> (n_hosts, n_links) of the setup's topology (FailureSchedule
     constructor args)."""

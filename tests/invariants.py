@@ -23,6 +23,16 @@ The invariants:
   counters non-negative, nothing left parked INSTALLING at the end, and
   with the ctrl plane off every ctrl counter is zero and placement never
   moved.
+- ``check_finite``       — every float leaf of the final state is finite,
+  except the documented sentinels: NaN for never-set timestamps
+  (``task_start``/``task_finish``/``pkt_start``/``pkt_finish``/
+  ``job_admit_t``/``job_done_t``) and +inf for the ``pkt_ready_t``
+  not-INSTALLING marker.  No other NaN/inf may ever escape the loop.
+- ``check_chaos``        — chaos accounting (DESIGN.md §13): speculation
+  counters/slots are zero/idle without clone capacity, ``degraded_time``
+  is zero without a degradation schedule, failover counters are zero
+  without a ctrl plane, and live clone slots always reference valid
+  ACTIVE originals with non-negative remaining work.
 - ``check_slots``        — slot conservation (DESIGN.md §11): admitted ==
   completed + in-flight over valid jobs, ``vm_load`` is EXACTLY the live
   placed-task count per VM, and unadmitted jobs' slots are untouched —
@@ -145,6 +155,76 @@ def check_ctrl(c, meta, s, label=""):
         f"{label}: migrated VM left the host range"
 
 
+# float state leaves where NaN is the documented "never set" sentinel
+_NAN_OK = {"task_start", "task_finish", "pkt_start", "pkt_finish",
+           "job_admit_t", "job_done_t"}
+# float state leaves where +inf is the documented "not parked" sentinel
+_INF_OK = {"pkt_ready_t"}
+
+
+def check_finite(c, meta, s, label=""):
+    """No undocumented NaN/inf escapes the event loop (DESIGN.md §13):
+    every float leaf is finite except the known sentinels, and even those
+    never mix sentinel kinds (a timestamp may be NaN but never inf; the
+    install-park marker may be inf but never NaN)."""
+    for name, leaf in zip(type(s)._fields, s):
+        a = _np(leaf)
+        if not np.issubdtype(a.dtype, np.floating):
+            continue
+        if name in _NAN_OK:
+            assert not np.any(np.isinf(a)), f"{label}: inf in {name}"
+        elif name in _INF_OK:
+            assert not np.any(np.isnan(a)), f"{label}: NaN in {name}"
+        else:
+            bad = ~np.isfinite(a)
+            assert not np.any(bad), \
+                f"{label}: non-finite {name} " \
+                f"({int(bad.sum())} of {a.size} entries)"
+
+
+def check_chaos(c, meta, s, label=""):
+    """Gray-failure / speculation / failover accounting (DESIGN.md §13)."""
+    launches = int(_np(s.spec_launches))
+    wins = int(_np(s.spec_wins))
+    wasted = float(_np(s.spec_wasted))
+    degraded = float(_np(s.degraded_time))
+    failovers = int(_np(s.ctrl_failovers))
+    park = float(_np(s.ctrl_failover_park))
+    if int(meta.spec_slots) == 0:
+        assert launches == wins == 0 and wasted == 0.0, \
+            f"{label}: speculation counters nonzero without clone slots"
+    assert launches >= 0 and wins >= 0 and wasted >= -_TOL, \
+        f"{label}: negative speculation counter"
+    assert wins <= launches, f"{label}: clone wins exceed launches"
+    if not meta.has_degradation:
+        assert degraded == 0.0, \
+            f"{label}: degraded_time nonzero without a degradation schedule"
+    assert 0.0 <= degraded <= float(_np(s.time)) * (1 + 1e-5) + _TOL, \
+        f"{label}: degraded_time outside [0, makespan]"
+    if not meta.has_ctrl:
+        assert failovers == 0 and park == 0.0, \
+            f"{label}: failover counters nonzero with the ctrl plane off"
+    assert failovers >= 0 and park >= -_TOL, \
+        f"{label}: negative failover counter"
+    # live clone slots reference valid, still-ACTIVE originals
+    spec_of = _np(s.spec_of)
+    live = spec_of >= 0
+    if np.any(live):
+        orig = spec_of[live]
+        n_t = _np(s.task_state).shape[0]
+        assert np.all(orig < n_t), f"{label}: clone references bad task"
+        assert np.all(_np(c.task_valid)[orig]), \
+            f"{label}: clone of a pad task"
+        assert np.all(_np(s.task_state)[orig] == ACTIVE), \
+            f"{label}: clone outlived its original"
+        assert np.all(_np(s.spec_rem)[live] >= -_TOL), \
+            f"{label}: negative clone remaining work"
+        n_vms = _np(s.vm_load).shape[0]
+        svm = _np(s.spec_vm)[live]
+        assert np.all((svm >= 0) & (svm < n_vms)), \
+            f"{label}: clone on a bad VM"
+
+
 def check_slots(c, meta, s, label=""):
     """Slot conservation (DESIGN.md §11), valid on ANY state — final or a
     streaming chunk boundary: the job ledger balances, ``vm_load`` equals
@@ -213,7 +293,8 @@ def check_stream(res, label=""):
 
 
 ALL_INVARIANTS = (check_terminal, check_clock, check_pad_inert,
-                  check_energy, check_ctrl, check_slots)
+                  check_energy, check_ctrl, check_slots, check_finite,
+                  check_chaos)
 
 
 def check_all(c, meta, s, label="", expect_stalled=False):

@@ -437,6 +437,14 @@ CTRL_SCENARIOS = [
     ("paper-fabric-ctrl", dict(split=1)),
     ("leaf-spine-ctrl", dict(n_jobs=4)),
 ]
+# chaos scenarios enter with degradation, ctrl AND spec_slots STRIPPED:
+# the §13 off switch must trace the exact pre-chaos program (what remains
+# is a plain failures / plain scenario the reference kernel handles) —
+# the on-behavior is covered by tests/test_chaos.py
+CHAOS_SCENARIOS = [
+    ("paper-fabric-chaos", dict(split=1)),
+    ("leaf-spine-chaos", dict(n_jobs=4)),
+]
 
 
 def policy_grid(seeds=(0, 1, 2)):
@@ -458,10 +466,13 @@ def policy_grid(seeds=(0, 1, 2)):
     return pols
 
 
-def _run_grid(scenarios, strip_ctrl=False):
+def _run_grid(scenarios, strip_ctrl=False, strip_chaos=False):
     setups = [get_scenario(name, **kw).build() for name, kw in scenarios]
     if strip_ctrl:
         setups = [dataclasses.replace(s, ctrl=None) for s in setups]
+    if strip_chaos:
+        setups = [dataclasses.replace(s, degradation=None, ctrl=None,
+                                      spec_slots=0) for s in setups]
     consts, meta = pack_setups(setups)
     pols = {k: jnp.asarray(v) for k, v in policy_arrays(policy_grid()).items()}
 
@@ -477,7 +488,8 @@ def _run_grid(scenarios, strip_ctrl=False):
 def test_all_scenarios_registered():
     """The grids below must cover every registered scenario."""
     covered = {n for n, _ in
-               NO_FAILURE_SCENARIOS + FAILURE_SCENARIOS + CTRL_SCENARIOS}
+               NO_FAILURE_SCENARIOS + FAILURE_SCENARIOS + CTRL_SCENARIOS
+               + CHAOS_SCENARIOS}
     assert covered == set(list_scenarios())
 
 
@@ -505,6 +517,20 @@ def test_grid_bit_identity_ctrl_stripped():
     program, not a dynamically-disabled one."""
     ref_states, new_states, names = _run_grid(CTRL_SCENARIOS,
                                               strip_ctrl=True)
+    for si, name in enumerate(names):
+        ref = jax.tree_util.tree_map(lambda a: a[si], ref_states)
+        new = jax.tree_util.tree_map(lambda a: a[si], new_states)
+        assert_states_equal(ref, new, name)
+
+
+def test_grid_bit_identity_chaos_stripped():
+    """The §13 off switch: the chaos scenarios with degradation, ctrl and
+    clone capacity removed must be BITWISE the pre-chaos engine across the
+    whole policy x seed grid — gray failures, speculation and failover all
+    sit behind trace-time ``meta`` switches, so off is the identical
+    program, not a dynamically-disabled one."""
+    ref_states, new_states, names = _run_grid(CHAOS_SCENARIOS,
+                                              strip_chaos=True)
     for si, name in enumerate(names):
         ref = jax.tree_util.tree_map(lambda a: a[si], ref_states)
         new = jax.tree_util.tree_map(lambda a: a[si], new_states)

@@ -11,7 +11,7 @@ from repro.api import runners
 from repro.core.policies import (INSTALL_PROACTIVE, MIG_CONGESTION,
                                  PLACE_ROUND_ROBIN, PolicyConfig,
                                  RECOVERY_RESUME, ROUTE_LEGACY, ROUTE_SDN,
-                                 TRAFFIC_WATERFILL)
+                                 SPEC_ON, TRAFFIC_WATERFILL)
 from repro.scenarios import get_scenario, list_scenarios
 from repro.scenarios.sweep import pack_setups, policy_arrays
 
@@ -29,6 +29,8 @@ SCENARIOS = [
     ("paper-fabric-ctrl", dict(split=1)),
     ("leaf-spine-ctrl", dict(n_jobs=4)),
     ("leaf-spine-stream", dict(horizon=160.0, max_jobs=4)),
+    ("paper-fabric-chaos", dict(split=1)),
+    ("leaf-spine-chaos", dict(n_jobs=4)),
 ]
 
 # one policy per branch family, cycling the secondary axes — including
@@ -43,6 +45,9 @@ POLICIES = [
                              traffic=TRAFFIC_WATERFILL, seed=1)),
     ("sdn-mig", PolicyConfig(routing=ROUTE_SDN, migration=MIG_CONGESTION,
                              recovery=RECOVERY_RESUME, job_concurrency=2)),
+    ("sdn-spec", PolicyConfig(routing=ROUTE_SDN, speculation=SPEC_ON,
+                              placement=PLACE_ROUND_ROBIN,
+                              job_concurrency=2, seed=2)),
 ]
 
 
